@@ -1,0 +1,105 @@
+"""Block-sparse tensor computing: the paper's target workload.
+
+    PYTHONPATH=src python examples/blocksparse_contraction.py
+
+1. Block-sparse C = A.B with distance-decay structure: dead panels are
+   skipped at trace time (communication AND compute scale with fill).
+2. Nonuniformly blocked matrices (physics-driven blocking) through the
+   bucketized uniform-tile engine.
+3. A chained contraction D = (A.B).C — two SUMMA multiplications in one
+   jitted program, schedulable jointly (the paper's "no global sync
+   lets multiple MMs overlap").
+"""
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze_hlo
+from repro.core import (
+    DistributedMatmul,
+    NonuniformMatmul,
+    decay_block_mask,
+    nonuniform_tiling,
+    reference_blocksparse_matmul,
+    reference_matmul,
+)
+from repro.core.summa import SummaConfig, summa_blocksparse_matmul, summa_matmul
+from repro.launch.mesh import make_mesh
+
+
+def main():
+    mesh = make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+
+    # --- 1. block-sparse with distance decay --------------------------------
+    n, kb = 1024, 16
+    a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    am = decay_block_mask(kb, kb, decay=0.5, threshold=5e-2)
+    bm = decay_block_mask(kb, kb, decay=0.5, threshold=5e-2)
+    # compact operator support: the last quarter of the inner dimension is
+    # screened out entirely -> those SUMMA panels are dead (never
+    # broadcast, never multiplied)
+    am[:, 3 * kb // 4 :] = False
+    bm[3 * kb // 4 :, :] = False
+    cfg = SummaConfig(mesh=mesh, strategy="taskbased", k_blocks=kb)
+    got = np.asarray(summa_blocksparse_matmul(a, b, am, bm, cfg))
+    want = np.asarray(reference_blocksparse_matmul(a, b, am, bm))
+    fill = am.mean()
+    print(f"decay mask fill={fill:.2f}  max|err|={np.abs(got - want).max():.2e}")
+
+    dense_txt = (
+        jax.jit(lambda a, b: summa_matmul(a, b, cfg)).lower(a, b).compile().as_text()
+    )
+    sparse_txt = (
+        jax.jit(lambda a, b: summa_blocksparse_matmul(a, b, am, bm, cfg))
+        .lower(a, b)
+        .compile()
+        .as_text()
+    )
+    cd, cs = analyze_hlo(dense_txt), analyze_hlo(sparse_txt)
+    print(
+        f"collective bytes/device: dense {cd.coll_bytes:.3g} -> "
+        f"sparse {cs.coll_bytes:.3g} "
+        f"({cs.coll_bytes / max(cd.coll_bytes, 1):.0%})"
+    )
+
+    # --- 2. nonuniform (physics-driven) blocking -----------------------------
+    rt = nonuniform_tiling(1000, 12, seed=1)
+    it = nonuniform_tiling(1200, 10, seed=2)
+    ct = nonuniform_tiling(900, 9, seed=3)
+    a2 = jnp.asarray(rng.normal(size=(1000, 1200)), jnp.float32)
+    b2 = jnp.asarray(rng.normal(size=(1200, 900)), jnp.float32)
+    nmm = NonuniformMatmul(
+        DistributedMatmul(mesh, strategy="taskbased"), rt, it, ct, tile=64
+    )
+    got2 = np.asarray(nmm(a2, b2))
+    want2 = np.asarray(reference_matmul(a2, b2))
+    print(
+        f"nonuniform blocks {rt.sizes[:4]}...  "
+        f"padding waste {nmm.padding_waste}  "
+        f"max|err|={np.abs(got2 - want2).max():.2e}"
+    )
+
+    # --- 3. chained contraction D = (A.B).C ----------------------------------
+    c = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+
+    @jax.jit
+    def chain(a, b, c):
+        ab = summa_matmul(a, b, cfg)
+        return summa_matmul(ab, c, cfg)
+
+    got3 = np.asarray(chain(a, b, c))
+    want3 = np.asarray(reference_matmul(jnp.asarray(want := a @ b), c))
+    print(f"chained contraction max|err|={np.abs(got3 - np.asarray(want3)).max():.2e}")
+
+
+if __name__ == "__main__":
+    main()

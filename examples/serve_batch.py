@@ -1,0 +1,35 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch mixtral-8x7b]
+
+Runs the smoke-size config of the chosen arch (including MoE and hybrid
+recurrent archs — each uses its own cache kind: KV ring buffers for
+sliding-window attention, O(1) recurrent state for RG-LRU/xLSTM).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    serve_main(
+        [
+            "--arch", args.arch, "--smoke",
+            "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len),
+            "--gen", str(args.gen),
+        ]
+    )
+
+
+if __name__ == "__main__":
+    main()

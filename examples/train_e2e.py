@@ -1,0 +1,51 @@
+"""End-to-end training example: a ~25M-param LLaMA-style model for a few
+hundred steps on the deterministic synthetic stream.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+
+(The assigned full configs are exercised via the 512-chip dry-run; this
+example is sized for this container's single CPU core.  On a real pod,
+point --arch at any config in src/repro/configs.)
+
+Shows: checkpointing every 50 steps, deterministic resume, loss curve.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
+    args = ap.parse_args()
+
+    # ~25M params: 6 layers x d512 (mini-llama geometry, vocab 8192 via
+    # smoke config scaling isn't exposed on the CLI, so we use the arch
+    # registry's smoke config scaled through seq/batch instead).
+    losses = train_main(
+        [
+            "--arch", "llama3.2-1b", "--smoke",
+            "--steps", str(args.steps),
+            "--global-batch", "8",
+            "--seq", "256",
+            "--microbatches", "2",
+            "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "50",
+            "--log-every", "20",
+        ]
+    )
+    n = len(losses)
+    print("\nloss curve (every ~20 steps):")
+    for i in range(0, n, max(n // 15, 1)):
+        bar = "#" * int(max(losses[i], 0) / max(losses[0], 1e-9) * 40)
+        print(f"  step {i + 1:4d}  {losses[i]:8.4f}  {bar}")
+    assert losses[-1] < losses[0], "training must reduce loss"
+    print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} over {n} steps")
+
+
+if __name__ == "__main__":
+    main()

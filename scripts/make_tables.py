@@ -1,0 +1,118 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from results/.
+
+    PYTHONPATH=src python scripts/make_tables.py [--results results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "recurrentgemma-9b", "xlstm-1.3b", "hubert-xlarge", "llama3.2-1b",
+    "gemma-2b", "qwen2.5-32b", "command-r-35b", "mixtral-8x7b",
+    "kimi-k2-1t-a32b", "qwen2-vl-72b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    return f"{x:.4f}"
+
+
+def load(results_dir, pod="1pod"):
+    cells = {}
+    for f in glob.glob(os.path.join(results_dir, f"*__{pod}.json")):
+        r = json.load(open(f))
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def roofline_table(cells):
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " bound s | useful | frac-of-roofline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = cells.get((a, s))
+            if r is None:
+                print(f"| {a} | {s} | - | - | - | missing | - | - | - |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {a} | {s} | — | — | — | {r['status']} | — | — | — |")
+                continue
+            rf = r["roofline"]
+            frac = rf["compute_s"] / rf["bound_s"] if rf["bound_s"] else 0
+            print(
+                f"| {a} | {s} | {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+                f"| {fmt_s(rf['collective_s'])} | **{rf['dominant']}** "
+                f"| {fmt_s(rf['bound_s'])} | {rf['useful_ratio']:.2f} "
+                f"| {frac:.3f} |"
+            )
+
+
+def dryrun_table(cells1, cells2):
+    print("| arch | shape | 16x16 compile | bytes/dev (args+temp) "
+          "| 2x16x16 compile | collectives (AG/AR/RS/A2A/CP counts) |")
+    print("|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r1 = cells1.get((a, s))
+            r2 = cells2.get((a, s))
+            if r1 is None or r1["status"] != "ok":
+                status = r1["status"] if r1 else "missing"
+                print(f"| {a} | {s} | {status} | — | — | — |")
+                continue
+            mem = r1.get("memory_analysis", {})
+            gb = (
+                mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+            ) / 1e9
+            cc = r1.get("collective_counts", {})
+            counts = "/".join(
+                str(int(cc.get(k, 0)))
+                for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")
+            )
+            c2 = r2["compile_s"] if r2 and r2["status"] == "ok" else "—"
+            print(
+                f"| {a} | {s} | {r1['compile_s']}s | {gb:.2f} GB "
+                f"| {c2}s | {counts} |"
+            )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun", "perf"])
+    ap.add_argument("--perf-dir", default="results/perf")
+    args = ap.parse_args()
+    c1 = load(args.results, "1pod")
+    if args.table == "roofline":
+        roofline_table(c1)
+    elif args.table == "dryrun":
+        c2 = load(args.results, "2pod")
+        dryrun_table(c1, c2)
+    else:
+        for f in sorted(glob.glob(os.path.join(args.perf_dir, "*.json"))):
+            r = json.load(open(f))
+            if r["status"] != "ok":
+                print(f"{os.path.basename(f)}: {r['status']}")
+                continue
+            rf = r["roofline"]
+            print(
+                f"{os.path.basename(f)[:-5]}: compute={fmt_s(rf['compute_s'])} "
+                f"memory={fmt_s(rf['memory_s'])} coll={fmt_s(rf['collective_s'])} "
+                f"dom={rf['dominant']} bound={fmt_s(rf['bound_s'])} "
+                f"useful={rf['useful_ratio']:.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

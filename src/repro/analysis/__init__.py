@@ -1,0 +1,1 @@
+"""Compiled-artifact analysis: HLO parsing, roofline terms."""

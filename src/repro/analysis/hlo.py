@@ -1,0 +1,423 @@
+"""HLO analysis: trip-count-weighted FLOPs, bytes, and collective traffic.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+under-reports scanned layer stacks and microbatch loops by orders of
+magnitude.  This module parses the optimized HLO text instead:
+
+1. Build the computation call graph (while bodies with their
+   ``known_trip_count`` backend configs, fusions, calls, conditionals).
+2. Propagate execution weights from ENTRY (a body nested in two 16-trip
+   scans gets weight 256).
+3. Per computation, count
+   * dot FLOPs  = 2 x |result| x |contraction dims|  (MXU work),
+   * result bytes of every materializing instruction (x2 for read+write —
+     the HBM-traffic proxy),
+   * collective result bytes by op kind.
+
+Roofline terms (TPU v5e-like): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+__all__ = [
+    "HW",
+    "DEFAULT_HW",
+    "WeightedCost",
+    "analyze_hlo",
+    "roofline",
+    "RooflineReport",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # B/s per chip
+    ici_bw: float = 50e9  # B/s per link
+
+
+DEFAULT_HW = HW()
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# Buffers at or below this size are modelled as VMEM-resident (v5e has
+# 128 MB VMEM; 16 MB covers flash tiles and sequential grad accumulators
+# while leaving room for double-buffering).
+_VMEM_RESIDENT = 16 * 1024 * 1024
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# instruction line:  %name = <shape or tuple> opcode(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"((?:\((?:[^()]|\([^()]*\))*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _parse_dims(dims: str) -> list[int]:
+    return [int(d) for d in dims.split(",") if d]
+
+
+def _shape_list(shape_str: str) -> list[tuple[str, list[int]]]:
+    """All (dtype, dims) found in a shape string (handles tuples)."""
+    return [
+        (m.group(1), _parse_dims(m.group(2)))
+        for m in _SHAPE_RE.finditer(shape_str)
+        if m.group(1) in _DTYPE_BYTES
+    ]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_list(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# Ops that represent real HBM traffic on TPU.  Un-fused elementwise ops in
+# CPU HLO are skipped: the TPU pipeline fuses them into neighbours, so
+# counting them would systematically overstate the memory term.
+_MAJOR_BYTES_OPS = {
+    "dot", "fusion", "reduce", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "convolution",
+    "sort", "select-and-scatter", "pad", "cholesky", "triangular-solve",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "custom-call", "rng", "rng-bit-generator",
+}
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes_written: float = 0.0
+    coll_bytes: dict | None = None
+    coll_counts: dict | None = None
+    # edges: (callee_name, multiplier)
+    edges: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class WeightedCost:
+    flops: float
+    hbm_bytes: float
+    coll_bytes_by_op: dict[str, float]
+    coll_counts_by_op: dict[str, float]
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll_bytes_by_op.values())
+
+    @property
+    def wire_bytes(self) -> float:
+        return wire_bytes(self.coll_bytes_by_op)
+
+
+def wire_bytes(bytes_by_op: dict[str, float], group: int = 16) -> float:
+    """Per-device ICI wire traffic from result-shape bytes.
+
+    Ring-algorithm cost model per device (g = group size):
+      all-gather:        result x (g-1)/g      (result is the gathered buf)
+      all-reduce:        2 x result x (g-1)/g  (reduce-scatter + all-gather)
+      reduce-scatter:    result x (g-1)        (result is the 1/g shard)
+      all-to-all:        result x (g-1)/g
+      collective-permute: result               (one hop)
+    """
+    f = (group - 1) / group
+    w = 0.0
+    w += bytes_by_op.get("all-gather", 0.0) * f
+    w += bytes_by_op.get("all-reduce", 0.0) * 2 * f
+    w += bytes_by_op.get("reduce-scatter", 0.0) * (group - 1)
+    w += bytes_by_op.get("all-to-all", 0.0) * f
+    w += bytes_by_op.get("collective-permute", 0.0)
+    return w
+
+
+def _parse_computations(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry_name = None
+    shapes: dict[str, str] = {}  # instr name -> result shape str (per comp)
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and (line.startswith("ENTRY") or line.startswith("%")):
+            cur = _Comp(
+                name=hdr.group(1),
+                coll_bytes={op: 0.0 for op in COLLECTIVE_OPS},
+                coll_counts={op: 0.0 for op in COLLECTIVE_OPS},
+            )
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry_name = cur.name
+            shapes = {}
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, opcode, rest = m.groups()
+        shapes[name] = shape_str
+        result_bytes = _shape_bytes(shape_str)
+        if opcode == "convert":
+            # dtype converts fuse into their consumer on TPU (e.g. int8
+            # KV-cache dequant feeding a matmul reads int8, not f32):
+            # propagate the SOURCE shape for traffic accounting.
+            src = re.findall(r"%([\w.\-]+)", rest)
+            if src and src[0] in shapes:
+                shapes[name] = shapes[src[0]]
+        if opcode in _MAJOR_BYTES_OPS:
+            # HBM traffic model: buffers small enough to live in VMEM
+            # (<= _VMEM_RESIDENT bytes) are free — the TPU pipeline keeps
+            # tiles on-chip.  Slice-type ops touch only the slice, not
+            # their operand; dynamic-update-slice/scatter touch only the
+            # update region, not the full buffer.
+            operand_names = re.findall(
+                r"%([\w.\-]+)", rest.split("), ")[0]
+            )
+            if opcode in ("dynamic-slice", "slice", "gather"):
+                traffic = 2 * result_bytes  # read slice + write slice
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                upd_idx = 1 if opcode == "dynamic-update-slice" else 2
+                upd = (
+                    _shape_bytes(shapes[operand_names[upd_idx]])
+                    if len(operand_names) > upd_idx
+                    and operand_names[upd_idx] in shapes
+                    else result_bytes
+                )
+                traffic = 2 * upd
+                if traffic > 2 * result_bytes:
+                    traffic = 2 * result_bytes
+            elif opcode == "fusion" and "dynamic-update-slice" in name:
+                # DUS-rooted fusion: XLA updates the buffer in place; the
+                # traffic is the update region (operands minus the buffer
+                # itself), not the whole buffer.
+                ops_b = sorted(
+                    (
+                        _shape_bytes(shapes[o])
+                        for o in operand_names
+                        if o in shapes
+                    ),
+                    reverse=True,
+                )
+                traffic = 2 * sum(ops_b[1:]) if len(ops_b) > 1 else result_bytes
+                traffic = min(traffic, 2 * result_bytes)
+            elif opcode == "fusion" and (
+                "dynamic-slice" in name or "gather" in name
+            ):
+                traffic = 2 * result_bytes
+            elif opcode == "fusion" and "reduce" not in name:
+                # loop/elementwise fusion: each operand contributes at most
+                # O(result) traffic (a fused slice reads the slice, a
+                # broadcast reads the source once) — cap the per-operand
+                # charge; reduce-rooted fusions legitimately read more and
+                # are handled below.
+                cap = max(4 * result_bytes, _VMEM_RESIDENT)
+                traffic = sum(
+                    min(_shape_bytes(shapes[o]), cap)
+                    for o in operand_names
+                    if o in shapes
+                    and _shape_bytes(shapes[o]) > _VMEM_RESIDENT
+                )
+                if result_bytes > _VMEM_RESIDENT:
+                    traffic += result_bytes
+            else:
+                traffic = sum(
+                    b
+                    for o in operand_names
+                    if o in shapes
+                    and (b := _shape_bytes(shapes[o])) > _VMEM_RESIDENT
+                )
+                if result_bytes > _VMEM_RESIDENT:
+                    traffic += result_bytes
+            if traffic > _VMEM_RESIDENT:
+                cur.bytes_written += traffic
+        # --- call graph edges
+        if opcode == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            trip = 1
+            tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+            if tm:
+                trip = int(tm.group(1))
+            if bm:
+                cur.edges.append((bm.group(1), trip))
+            cm = re.search(r"condition=%?([\w.\-]+)", line)
+            if cm:
+                cur.edges.append((cm.group(1), trip))
+        elif opcode == "fusion":
+            fm = re.search(r"calls=%?([\w.\-]+)", line)
+            if fm:
+                cur.edges.append((fm.group(1), 1))
+        elif opcode == "call":
+            fm = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if fm:
+                cur.edges.append((fm.group(1), 1))
+        elif opcode == "conditional":
+            for fm in re.finditer(r"(?:true|false)_computation=%?([\w.\-]+)", line):
+                cur.edges.append((fm.group(1), 1))
+            bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if bm:
+                for nm in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                    cur.edges.append((nm, 1))
+        elif opcode in ("reduce", "sort", "scatter", "map", "reduce-window"):
+            fm = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if fm:
+                cur.edges.append((fm.group(1), 1))
+        # --- dot flops
+        if opcode == "dot":
+            flops = _dot_flops(line, shape_str, shapes)
+            cur.flops += flops
+        # --- collectives
+        if opcode in COLLECTIVE_OPS:
+            cur.coll_bytes[opcode] += result_bytes
+            cur.coll_counts[opcode] += 1
+        elif opcode.endswith("-start") and opcode[:-6] in COLLECTIVE_OPS:
+            cur.coll_bytes[opcode[:-6]] += result_bytes
+            cur.coll_counts[opcode[:-6]] += 1
+    comps["__entry__"] = comps.get(entry_name, _Comp(name="__entry__"))
+    comps["__entry_name__"] = entry_name  # type: ignore[assignment]
+    return comps
+
+
+def _dot_flops(line: str, result_shape: str, shapes: dict[str, str]) -> float:
+    """2 x |result| x |lhs contracting dims|."""
+    res = _shape_list(result_shape)
+    if not res:
+        return 0.0
+    result_elems = 1
+    for d in res[0][1]:
+        result_elems *= d
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    om = re.search(r"dot\(%?([\w.\-]+),", line)
+    contract = 1
+    if cm and om:
+        lhs_shape = shapes.get(om.group(1))
+        if lhs_shape:
+            dims = _shape_list(lhs_shape)
+            if dims:
+                lhs_dims = dims[0][1]
+                for idx in _parse_dims(cm.group(1)):
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+    return 2.0 * result_elems * contract
+
+
+def analyze_hlo(hlo_text: str) -> WeightedCost:
+    comps = _parse_computations(hlo_text)
+    entry_name = comps.pop("__entry_name__", None)  # type: ignore[arg-type]
+    comps.pop("__entry__", None)
+    if entry_name is None or entry_name not in comps:
+        # fall back: treat the computation with most flops as entry
+        entry_name = max(comps, key=lambda c: comps[c].flops) if comps else None
+    weights: dict[str, float] = {c: 0.0 for c in comps}
+
+    def visit(name: str, w: float, depth=0):
+        if name not in comps or depth > 50:
+            return
+        weights[name] += w
+        for callee, mult in comps[name].edges:
+            visit(callee, w * mult, depth + 1)
+
+    if entry_name:
+        visit(entry_name, 1.0)
+
+    flops = 0.0
+    bts = 0.0
+    coll_b = {op: 0.0 for op in COLLECTIVE_OPS}
+    coll_c = {op: 0.0 for op in COLLECTIVE_OPS}
+    for name, comp in comps.items():
+        w = weights.get(name, 0.0)
+        if w == 0.0:
+            continue
+        flops += w * comp.flops
+        bts += w * comp.bytes_written
+        for op in COLLECTIVE_OPS:
+            coll_b[op] += w * comp.coll_bytes[op]
+            coll_c[op] += w * comp.coll_counts[op]
+    return WeightedCost(
+        flops=flops,
+        hbm_bytes=bts,  # operand reads + result writes of major ops
+        coll_bytes_by_op=coll_b,
+        coll_counts_by_op=coll_c,
+    )
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    bound_s: float
+
+    def row(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def roofline(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    chips: int,
+    model_flops: float = 0.0,
+    hw: HW = DEFAULT_HW,
+) -> RooflineReport:
+    """Three-term roofline from *per-device* HLO quantities."""
+    compute_s = flops / hw.peak_flops
+    memory_s = hbm_bytes / hw.hbm_bw
+    collective_s = coll_bytes / hw.ici_bw
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    useful = model_flops / (flops * chips) if flops else 0.0
+    return RooflineReport(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        coll_bytes=coll_bytes,
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        bound_s=max(terms.values()),
+    )

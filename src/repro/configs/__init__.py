@@ -1,0 +1,2 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+from repro.configs.registry import ARCH_IDS, SKIPS, cell_skip_reason, get_config

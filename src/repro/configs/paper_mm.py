@@ -1,0 +1,33 @@
+"""The paper's own experiment configurations (matrix multiplication).
+
+Matrix sizes and blockings from §4: BG/Q weak/strong scaling used square
+matrices N in {32768, 65536, 98304, 256000}; the commodity-cluster strong
+scaling used N=32768 with block size 256 (uniform) and average 256
+(nonuniform).  These drive benchmarks/ and the SUMMA-engine dry-run.
+"""
+import dataclasses
+
+PAPER_MATRIX_SIZES = (32_768, 65_536, 98_304, 256_000)
+COMMODITY_N = 32_768
+COMMODITY_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class MMConfig:
+    n: int  # square matrix dimension
+    block: int  # uniform block size (nonuniform: average)
+    nonuniform: bool = False
+    seed: int = 0
+
+    @property
+    def num_blocks(self) -> int:
+        return self.n // self.block
+
+
+# scaled-down versions runnable on this container (same structure)
+BENCH_CONFIGS = {
+    "uniform_small": MMConfig(n=2048, block=256),
+    "nonuniform_small": MMConfig(n=2048, block=256, nonuniform=True),
+    "uniform_medium": MMConfig(n=4096, block=256),
+    "nonuniform_medium": MMConfig(n=4096, block=256, nonuniform=True),
+}

@@ -1,0 +1,30 @@
+"""Core: task-based SUMMA for block-sparse tensor computing (the paper)."""
+from repro.core.api import DistributedMatmul, NonuniformMatmul, pad_to_multiple
+from repro.core.blocking import (
+    BucketedTiling,
+    LoadStats,
+    Tiling,
+    bucketize,
+    cyclic_owner,
+    load_stats,
+    nonuniform_tiling,
+    paper_nonuniform_sizes,
+    uniform_tiling,
+)
+from repro.core.sparsity import (
+    BlockCSR,
+    banded_block_mask,
+    block_csr_from_mask,
+    decay_block_mask,
+    mask_matmul_flops,
+    random_block_mask,
+)
+from repro.core.summa import (
+    SummaConfig,
+    multi_issue_limit,
+    reference_blocksparse_matmul,
+    reference_matmul,
+    summa_25d_matmul,
+    summa_blocksparse_matmul,
+    summa_matmul,
+)

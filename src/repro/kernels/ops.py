@@ -1,0 +1,176 @@
+"""Public wrappers for the Pallas kernels.
+
+Handle shape padding, tile selection, dtype policy, and backend dispatch:
+on TPU the kernels run compiled; on CPU they run in ``interpret=True``
+mode (Python-level execution of the kernel body) so every test validates
+the *same* kernel code that targets the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsity import BlockCSR, block_csr_from_mask
+from repro.kernels import ref
+from repro.kernels.bsmm import bsmm_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grouped_gemm import grouped_gemm_pallas
+from repro.kernels.tiled_matmul import tiled_matmul_pallas
+
+__all__ = ["tiled_matmul", "bsmm", "grouped_gemm", "flash_attention"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x, mults):
+    pads = [(0, -(-d // m) * m - d) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    """Largest power-of-two tile <= pref that keeps padding reasonable."""
+    t = pref
+    while t > 8 and dim % t and dim < t:
+        t //= 2
+    return max(t, 8)
+
+
+def tiled_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 256,
+    bk: int = 256,
+    bn: int = 256,
+    accum_dtype=jnp.float32,
+    out_dtype=None,
+) -> jax.Array:
+    """C = A @ B via the tiled Pallas kernel, auto-padded."""
+    del accum_dtype  # kernel always accumulates fp32
+    m, k = a.shape
+    _, n = b.shape
+    bm = _pick_tile(m, bm)
+    bk = _pick_tile(k, bk)
+    bn = _pick_tile(n, bn)
+    a_p = _pad2(a, (bm, bk))
+    b_p = _pad2(b, (bk, bn))
+    c = tiled_matmul_pallas(
+        a_p, b_p, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=_interpret()
+    )
+    return c[:m, :n]
+
+
+def bsmm(
+    a: jax.Array,
+    b: jax.Array,
+    mask: np.ndarray,
+    *,
+    bn: int = 256,
+    out_dtype=None,
+) -> jax.Array:
+    """Block-sparse C = A @ B; ``mask`` is the (M_blk, K_blk) block mask.
+
+    Block sizes are derived from the mask grid; A's shape must divide the
+    mask evenly.  Zero block rows produce zero C rows.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    mask = np.asarray(mask, bool)
+    mb, kb = mask.shape
+    if m % mb or k % kb:
+        raise ValueError(f"operand {a.shape} not divisible by mask {mask.shape}")
+    bm_sz, bk_sz = m // mb, k // kb
+    csr = block_csr_from_mask(mask)
+    cols = jnp.asarray(csr.padded_cols(max(csr.max_row_nnz, 1)))
+    bn = _pick_tile(n, bn)
+    b_p = _pad2(b, (bk_sz, bn))
+    c = bsmm_pallas(
+        a,
+        b_p,
+        cols,
+        bm=bm_sz,
+        bk=bk_sz,
+        bn=bn,
+        out_dtype=out_dtype,
+        interpret=_interpret(),
+    )
+    return c[:, :n]
+
+
+def grouped_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    tile_expert: jax.Array,
+    *,
+    bt: int = 256,
+    bk: int = 256,
+    bn: int = 256,
+    out_dtype=None,
+) -> jax.Array:
+    """Tile-aligned grouped GEMM (MoE expert compute)."""
+    t, d = x.shape
+    e, _, f = w.shape
+    if t % bt:
+        raise ValueError(f"token count {t} must divide tile {bt}")
+    bk = _pick_tile(d, bk)
+    bn = _pick_tile(f, bn)
+    x_p = _pad2(x, (bt, bk))
+    w_p = jnp.pad(
+        w,
+        (
+            (0, 0),
+            (0, x_p.shape[1] - d),
+            (0, -(-f // bn) * bn - f),
+        ),
+    )
+    y = grouped_gemm_pallas(
+        x_p,
+        w_p,
+        tile_expert,
+        bt=bt,
+        bk=bk,
+        bn=bn,
+        out_dtype=out_dtype,
+        interpret=_interpret(),
+    )
+    return y[:, :f]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 256,
+    bk: int = 256,
+) -> jax.Array:
+    """Tiled online-softmax attention (forward)."""
+    s = q.shape[2]
+    bq = _pick_tile(s, bq)
+    bk = _pick_tile(k.shape[2], bk)
+    if s % bq or k.shape[2] % bk:
+        # fall back to padded ref for awkward shapes (rare; serving pads)
+        return ref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, scale=scale
+        )
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        scale=scale,
+        bq=bq,
+        bk=bk,
+        interpret=_interpret(),
+    )

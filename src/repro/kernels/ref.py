@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "matmul_ref",
+    "bsmm_ref",
+    "grouped_gemm_ref",
+    "flash_attention_ref",
+]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def bsmm_ref(
+    a: jax.Array,
+    b: jax.Array,
+    mask: np.ndarray,  # (M_blocks, K_blocks) bool
+    out_dtype=None,
+) -> jax.Array:
+    """Zero A's masked blocks, then dense matmul."""
+    m, k = a.shape
+    mb, kb = np.asarray(mask).shape
+    fine = np.repeat(np.repeat(np.asarray(mask, bool), m // mb, 0), k // kb, 1)
+    a_z = jnp.where(jnp.asarray(fine), a, jnp.zeros((), a.dtype))
+    return matmul_ref(a_z, b, out_dtype)
+
+
+def grouped_gemm_ref(
+    x: jax.Array,  # (T, D)
+    w: jax.Array,  # (E, D, F)
+    tile_expert: jax.Array,  # (T // bt,) int32
+    bt: int,
+    out_dtype=None,
+) -> jax.Array:
+    """Per-tile expert matmul: y[tile] = x[tile] @ w[tile_expert[tile]]."""
+    out_dtype = out_dtype or x.dtype
+    t, d = x.shape
+    xt = x.reshape(t // bt, bt, d)
+    wt = jnp.take(w, tile_expert, axis=0)  # (T//bt, D, F)
+    y = jnp.einsum("tbd,tdf->tbf", xt, wt, preferred_element_type=jnp.float32)
+    return y.reshape(t, -1).astype(out_dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, S, Dh)
+    k: jax.Array,  # (B, Hkv, S, Dh)
+    v: jax.Array,  # (B, Hkv, S, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Reference attention with GQA, causal and sliding-window masks."""
+    out_dtype = out_dtype or q.dtype
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, hkv, g, s, dh)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qg, kf)
+    pos_q = jnp.arange(s)[:, None]
+    pos_k = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos_q >= pos_k
+    if window is not None:
+        mask &= pos_q - pos_k < window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", probs, vf)
+    return out.reshape(b, h, s, dh).astype(out_dtype)

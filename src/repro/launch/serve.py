@@ -1,0 +1,101 @@
+"""Serving driver: batched prefill + autoregressive decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+
+Runs greedy decoding over synthetic prompts and reports prefill/decode
+throughput.  With ``--tp > 1`` the KV cache is sequence-sharded and decode
+attention uses the LSE-combined partial-softmax path.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.dist.context import ParallelCtx
+from repro.dist.partitioning import param_shardings
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import init_model
+from repro.serve import engine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.family == "audio":
+        raise SystemExit("encoder-only arch has no autoregressive serving")
+    mesh = make_host_mesh(args.dp, args.tp)
+    ctx = ParallelCtx(mesh=mesh)
+    rng = jax.random.PRNGKey(args.seed)
+    max_len = args.prompt_len + args.gen
+
+    with mesh:
+        params = init_model(rng, cfg, ctx)
+        params = jax.tree.map(
+            jax.device_put, params, param_shardings(params, mesh)
+        )
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+            cfg.vocab_size,
+        )
+        inputs = {"tokens": prompts}
+        if cfg.family == "vlm":
+            s_vis = args.prompt_len // 4
+            inputs = {
+                "tokens": prompts[:, s_vis:],
+                "embeds": jnp.zeros(
+                    (args.batch, s_vis, cfg.d_model), jnp.bfloat16
+                ),
+                "positions": jnp.broadcast_to(
+                    jnp.arange(args.prompt_len)[None, :, None],
+                    (args.batch, args.prompt_len, 3),
+                ).astype(jnp.int32),
+            }
+
+        prefill = jax.jit(
+            lambda p, b: engine.prefill(p, b, cfg, ctx, max_len=max_len)
+        )
+        decode = jax.jit(lambda p, c, t: engine.decode_step(p, c, t, cfg, ctx))
+
+        t0 = time.time()
+        logits, cache = prefill(params, inputs)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+
+        tokens = jnp.argmax(logits, axis=-1)
+        out_tokens = [tokens]
+        t0 = time.time()
+        for _ in range(args.gen - 1):
+            logits, cache = decode(params, cache, tokens)
+            tokens = jnp.argmax(logits, axis=-1)
+            out_tokens.append(tokens)
+        tokens.block_until_ready()
+        t_decode = time.time() - t0
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"generated shape: {gen.shape}")
+    print(f"sample: {gen[0][:16].tolist()}")
+    print(
+        f"prefill: {args.batch * args.prompt_len / t_prefill:,.0f} tok/s   "
+        f"decode: {args.batch * (args.gen - 1) / max(t_decode, 1e-9):,.0f} tok/s"
+    )
+    return gen
+
+
+if __name__ == "__main__":
+    main()

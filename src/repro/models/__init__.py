@@ -1,0 +1,3 @@
+"""Model stack: configs, layers, blocks, and the assembled LM."""
+from repro.models.config import ModelConfig, MoEConfig, ShapeConfig, SHAPES
+from repro.models.model import forward, init_model, loss_fn

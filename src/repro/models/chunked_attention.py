@@ -1,0 +1,184 @@
+"""Flash-style chunked attention with a custom VJP — differentiable, and
+no S x S materialization in either pass.
+
+The reference attention writes (B, H, S, S) logits/probs to HBM (forward
+AND backward), which dominates the memory roofline term of every
+full-attention train cell.  This version tiles the computation into
+(Cq x Ck) blocks: the forward is an online-softmax sweep, the backward
+recomputes probability tiles (flash-attention recomputation).  All tiles
+are VMEM-sized; only q/k/v/o/do and the (B, H, S) row statistics touch
+HBM.  Causal block skipping drops ~half the tile work.
+
+This is the "beyond-paper" optimization applied to the assigned LM cells
+(EXPERIMENTS.md §Perf); the Pallas kernel (kernels/flash_attention.py)
+covers the serving path, this covers training (XLA fuses the jnp tile
+bodies).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_attention"]
+
+_NEG = -1e30
+
+
+def _tile_logits(q_i, k_j, scale, causal, window, q0, k0, cq, ck):
+    """(B, Hkv, G, Cq, Ck) masked logit tile."""
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk",
+        q_i.astype(jnp.float32) * scale,
+        k_j.astype(jnp.float32),
+    )
+    pos_q = q0 + jnp.arange(cq)[:, None]
+    pos_k = k0 + jnp.arange(ck)[None, :]
+    mask = jnp.ones((cq, ck), bool)
+    if causal:
+        mask &= pos_q >= pos_k
+    if window is not None:
+        mask &= pos_q - pos_k < window
+    return jnp.where(mask, s, _NEG)
+
+
+def _fwd(q, k, v, scale, causal, window, cq, ck):
+    """Returns (o fp32, m, l) with shapes (B,Hkv,G,S,D), (B,Hkv,G,S)."""
+    b, hkv, g, s, d = q.shape
+    nq, nk = s // cq, s // ck
+    o = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    m_all = jnp.full((b, hkv, g, s), _NEG, jnp.float32)
+    l_all = jnp.zeros((b, hkv, g, s), jnp.float32)
+    for qi in range(nq):
+        q0 = qi * cq
+        q_i = jax.lax.dynamic_slice_in_dim(q, q0, cq, axis=3)
+        # causal: only kv chunks overlapping [*, q0+cq)
+        kj_hi = nk if not causal else (q0 + cq + ck - 1) // ck
+        kj_lo = 0
+        if window is not None:
+            kj_lo = max(0, (q0 - window) // ck)
+
+        def body(carry, kj):
+            m, l, acc = carry
+            k0 = kj * ck
+            k_j = jax.lax.dynamic_slice_in_dim(k, k0, ck, axis=2)
+            v_j = jax.lax.dynamic_slice_in_dim(v, k0, ck, axis=2)
+            st = _tile_logits(q_i, k_j, scale, causal, window, q0, k0, cq, ck)
+            m_new = jnp.maximum(m, st.max(-1))
+            p = jnp.exp(st - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_j.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        (m_i, l_i, acc_i), _ = jax.lax.scan(
+            body, (m0, l0, a0), jnp.arange(kj_lo, kj_hi)
+        )
+        l_safe = jnp.where(l_i == 0, 1.0, l_i)
+        o = jax.lax.dynamic_update_slice_in_dim(
+            o, acc_i / l_safe[..., None], q0, axis=3
+        )
+        m_all = jax.lax.dynamic_update_slice_in_dim(m_all, m_i, q0, axis=3)
+        l_all = jax.lax.dynamic_update_slice_in_dim(l_all, l_safe, q0, axis=3)
+    return o, m_all, l_all
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _chunked_core(q, k, v, scale, causal, window, cq, ck):
+    o, _, _ = _fwd(q, k, v, scale, causal, window, cq, ck)
+    return o
+
+
+def _chunked_core_fwd(q, k, v, scale, causal, window, cq, ck):
+    o, m, l = _fwd(q, k, v, scale, causal, window, cq, ck)
+    return o, (q, k, v, o, m, l)
+
+
+def _chunked_core_bwd(scale, causal, window, cq, ck, res, do):
+    q, k, v, o, m, l = res
+    b, hkv, g, s, d = q.shape
+    nq, nk = s // cq, s // ck
+    do = do.astype(jnp.float32)
+    delta = (do * o).sum(-1)  # (B,Hkv,G,S)
+    dq = jnp.zeros_like(q, jnp.float32)
+    dk = jnp.zeros((b, hkv, s, d), jnp.float32)
+    dv = jnp.zeros((b, hkv, s, d), jnp.float32)
+    for qi in range(nq):
+        q0 = qi * cq
+        q_i = jax.lax.dynamic_slice_in_dim(q, q0, cq, axis=3)
+        do_i = jax.lax.dynamic_slice_in_dim(do, q0, cq, axis=3)
+        m_i = jax.lax.dynamic_slice_in_dim(m, q0, cq, axis=3)
+        l_i = jax.lax.dynamic_slice_in_dim(l, q0, cq, axis=3)
+        dl_i = jax.lax.dynamic_slice_in_dim(delta, q0, cq, axis=3)
+        kj_hi = nk if not causal else (q0 + cq + ck - 1) // ck
+        kj_lo = 0 if window is None else max(0, (q0 - window) // ck)
+
+        def body(carry, kj):
+            dq_i, dk_acc, dv_acc = carry
+            k0 = kj * ck
+            k_j = jax.lax.dynamic_slice_in_dim(k, k0, ck, axis=2)
+            v_j = jax.lax.dynamic_slice_in_dim(v, k0, ck, axis=2)
+            st = _tile_logits(q_i, k_j, scale, causal, window, q0, k0, cq, ck)
+            p = jnp.exp(st - m_i[..., None]) / l_i[..., None]
+            dv_t = jnp.einsum("bhgqk,bhgqd->bhkd", p, do_i)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_i, v_j.astype(jnp.float32))
+            ds = p * (dp - dl_i[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bhgqk,bhkd->bhgqd", ds, k_j.astype(jnp.float32))
+            dk_t = jnp.einsum("bhgqk,bhgqd->bhkd", ds, q_i.astype(jnp.float32))
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, jax.lax.dynamic_slice_in_dim(dk_acc, k0, ck, 2) + dk_t,
+                k0, axis=2,
+            )
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, jax.lax.dynamic_slice_in_dim(dv_acc, k0, ck, 2) + dv_t,
+                k0, axis=2,
+            )
+            return (dq_i, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        (dq_i, dk, dv), _ = jax.lax.scan(
+            body, (dq0, dk, dv), jnp.arange(kj_lo, kj_hi)
+        )
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, dq_i, q0, axis=3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_chunked_core.defvjp(_chunked_core_fwd, _chunked_core_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, H, S, Dh)
+    k: jax.Array,  # (B, Hkv, S, Dh)
+    v: jax.Array,  # (B, Hkv, S, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    chunk_q: int = 512,
+    chunk_k: int = 512,
+    out_dtype: Any | None = None,
+) -> jax.Array:
+    """Drop-in replacement for ref.flash_attention_ref, differentiable,
+    O(S) HBM in the sequence dimension."""
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    cq = min(chunk_q, s)
+    ck = min(chunk_k, s)
+    while s % cq:
+        cq //= 2
+    while s % ck:
+        ck //= 2
+    scale_val = float(scale) if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, hkv, g, s, dh)
+    o = _chunked_core(qg, k, v, scale_val, causal, window, cq, ck)
+    out_dtype = out_dtype or q.dtype
+    return o.reshape(b, h, s, dh).astype(out_dtype)

@@ -1,0 +1,46 @@
+"""Dense FFN sublayers: SwiGLU / GeGLU / GELU-MLP.
+
+TP: hidden dim sharded over ``ctx.tp_axis``; the down projection's output
+is constrained back to the activation sharding (GSPMD emits the
+reduce-scatter/all-reduce).  The big matmuls can optionally run through
+the task-based SUMMA engine (``matmul_strategy="summa"``, see
+dist/collective_matmul.py) — the paper's algorithm embedded in the LM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import ParallelCtx
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def init_ffn(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {
+        "norm": L.init_rmsnorm(d),
+        "w_up": L.init_dense(k1, d, f, dtype=dtype),
+        "w_down": L.init_dense(k2, f, d, dtype=dtype),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w_gate"] = L.init_dense(k3, d, f, dtype=dtype)
+    return p
+
+
+def ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx) -> jax.Array:
+    from repro.dist.collective_matmul import project
+
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    act = L.ACTIVATIONS[cfg.activation]
+    up = project(h, p["w_up"]["w"], ctx)
+    up = ctx.wsc(up, ctx.dp, None, ctx.tp_axis)
+    if "w_gate" in p:
+        gate = project(h, p["w_gate"]["w"], ctx)
+        gate = ctx.wsc(gate, ctx.dp, None, ctx.tp_axis)
+        hidden = act(gate) * up
+    else:
+        hidden = act(up)
+    out = project(hidden, p["w_down"]["w"], ctx)
+    return ctx.wsc(out, ctx.dp, None, None)

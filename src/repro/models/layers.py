@@ -1,0 +1,153 @@
+"""Primitive layers: norms, dense projections, embeddings, RoPE/M-RoPE.
+
+Parameters are plain nested dicts of jax arrays (pytree-native, no
+framework dependency); ``init_*`` functions build them, ``*_apply``
+functions consume them.  Sharding is attached externally by path-based
+rules (dist/partitioning.py), keeping model code mesh-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+
+
+def _dtype(cfg_dtype: str):
+    return jnp.dtype(cfg_dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# -- dense -------------------------------------------------------------------
+
+
+def init_dense(
+    rng, in_dim: int, out_dim: int, *, bias: bool = False, dtype=jnp.bfloat16
+) -> Params:
+    std = 1.0 / np.sqrt(in_dim)
+    p = {"w": (jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# -- embeddings --------------------------------------------------------------
+
+
+def init_embedding(rng, vocab: int, d: int, dtype=jnp.bfloat16) -> Params:
+    emb = jax.random.normal(rng, (vocab, d), jnp.float32).astype(dtype)
+    return {"embedding": emb}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied LM head: logits in fp32 for a stable softmax/CE."""
+    return jnp.einsum(
+        "...d,vd->...v", x, p["embedding"], preferred_element_type=jnp.float32
+    )
+
+
+# -- rotary embeddings -------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, Dh)
+    positions: jax.Array,  # (B, S)
+    theta: float = 10_000.0,
+) -> jax.Array:
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# M-RoPE (Qwen2-VL): the rotary frequency bands are partitioned into three
+# sections (temporal, height, width); each section rotates by its own
+# position stream.  Text tokens carry identical positions in all three
+# streams, so M-RoPE degenerates to RoPE for text.
+MROPE_SECTIONS = (0.25, 0.375, 0.375)  # fractions of Dh/2 per (t, h, w)
+
+
+def apply_mrope(
+    x: jax.Array,  # (B, S, H, Dh)
+    positions: jax.Array,  # (B, S, 3) -> (t, h, w) position per token
+    theta: float = 1_000_000.0,
+) -> jax.Array:
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = rope_frequencies(dh, theta)  # (half,)
+    n_t = int(half * MROPE_SECTIONS[0])
+    n_h = int(half * MROPE_SECTIONS[1])
+    section = np.zeros(half, dtype=np.int32)
+    section[n_t : n_t + n_h] = 1
+    section[n_t + n_h :] = 2
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.asarray(section)[None, None, :].repeat(positions.shape[0], 0)
+        .repeat(positions.shape[1], 1),
+        axis=-1,
+    )  # (B, S, half): per-band position choice
+    angles = pos * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- misc --------------------------------------------------------------------
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {
+    "swiglu": jax.nn.silu,
+    "geglu": gelu,
+    "gelu": gelu,
+}

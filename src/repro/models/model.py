@@ -1,0 +1,225 @@
+"""The assembled LM: heterogeneous block stacks, scan-over-units, losses.
+
+A model is ``embed -> [scan over repeating block-pattern units] -> tail
+-> norm -> head``.  Heterogeneous stacks (RecurrentGemma's
+(rglru, rglru, attn), xLSTM's (mlstm×7, slstm)) scan over *macro-units*
+so the whole depth stays a single rolled loop: compile time and HLO size
+are O(unit), not O(layers), which is what makes 80-layer × 512-device
+dry-runs tractable.  Remat (`jax.checkpoint`) wraps each unit.
+
+Inputs are a dict: ``tokens`` (B, S) int32 and/or ``embeds`` (B, S, D)
+(modality-frontend stubs for audio/VLM), ``positions`` (B, S) or
+(B, S, 3) for M-RoPE.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import ParallelCtx
+from repro.models import layers as L
+from repro.models.attention import attention, init_attention
+from repro.models.config import ModelConfig
+from repro.models.ffn import ffn, init_ffn
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.recurrent import (
+    init_mlstm_block,
+    init_rglru_block,
+    init_slstm_block,
+    mlstm_block,
+    rglru_block,
+    slstm_block,
+)
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_block(rng, kind: str, cfg: ModelConfig, ctx: ParallelCtx, dtype) -> Params:
+    if kind == "attn":
+        k1, k2 = jax.random.split(rng)
+        p = {"attn": init_attention(k1, cfg, dtype)}
+        if cfg.moe is not None:
+            p["moe"] = init_moe(k2, cfg, ctx, dtype)
+        elif cfg.d_ff:
+            p["ffn"] = init_ffn(k2, cfg, dtype)
+        return p
+    if kind == "rglru":
+        k1, k2 = jax.random.split(rng)
+        return {"rec": init_rglru_block(k1, cfg, dtype), "ffn": init_ffn(k2, cfg, dtype)}
+    if kind == "mlstm":
+        return {"rec": init_mlstm_block(rng, cfg, dtype)}
+    if kind == "slstm":
+        return {"rec": init_slstm_block(rng, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def init_model(rng, cfg: ModelConfig, ctx: ParallelCtx) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    n_units = cfg.units
+    pattern = cfg.block_pattern
+    keys = jax.random.split(rng, 4)
+
+    def init_unit(unit_rng):
+        ks = jax.random.split(unit_rng, len(pattern))
+        return {
+            f"b{j}": _init_block(ks[j], kind, cfg, ctx, dtype)
+            for j, kind in enumerate(pattern)
+        }
+
+    unit_rngs = jax.random.split(keys[0], n_units)
+    units = jax.vmap(init_unit)(unit_rngs)  # leaves stacked on axis 0
+
+    tail_rngs = jax.random.split(keys[1], max(len(cfg.tail), 1))
+    tail = [
+        _init_block(tail_rngs[j], kind, cfg, ctx, dtype)
+        for j, kind in enumerate(cfg.tail)
+    ]
+
+    params: Params = {"units": units, "tail": tail, "final_norm": L.init_rmsnorm(cfg.d_model)}
+    if cfg.embed_inputs:
+        params["embed"] = L.init_embedding(keys[2], cfg.vocab_size, cfg.d_model, dtype)
+    if not cfg.tie_embeddings or not cfg.embed_inputs:
+        params["head"] = L.init_dense(keys[3], cfg.d_model, cfg.vocab_size, dtype=dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def apply_block(
+    kind: str,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    *,
+    use_kernel: bool = False,
+):
+    """Residual application of one block; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        x = x + attention(
+            p["attn"], x, positions, cfg, ctx, window=cfg.window, use_kernel=use_kernel
+        )
+        if "moe" in p:
+            y, aux = moe_ffn(p["moe"], x, cfg, ctx)
+            x = x + y
+        elif "ffn" in p:
+            x = x + ffn(p["ffn"], x, cfg, ctx)
+    elif kind == "rglru":
+        x = x + rglru_block(p["rec"], x, cfg, ctx)
+        x = x + ffn(p["ffn"], x, cfg, ctx)
+    elif kind == "mlstm":
+        x = x + mlstm_block(p["rec"], x, cfg, ctx)
+    elif kind == "slstm":
+        x = x + slstm_block(p["rec"], x, cfg, ctx)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def embed_inputs(params: Params, inputs: dict, cfg: ModelConfig) -> jax.Array:
+    parts = []
+    if "embeds" in inputs and inputs["embeds"] is not None:
+        parts.append(inputs["embeds"])
+    if cfg.embed_inputs and "tokens" in inputs and inputs["tokens"] is not None:
+        parts.append(L.embed(params["embed"], inputs["tokens"]))
+    if not parts:
+        raise ValueError("inputs must contain 'tokens' and/or 'embeds'")
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return x
+
+
+def forward(
+    params: Params,
+    inputs: dict,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    *,
+    use_kernel: bool = False,
+    remat: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V) fp32, aux_loss scalar)."""
+    x = embed_inputs(params, inputs, cfg)
+    x = ctx.wsc(x, ctx.dp, None, None)
+    positions = inputs.get("positions")
+    if positions is None:
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def unit_fn(carry, unit_params):
+        x, aux = carry
+        for j, kind in enumerate(cfg.block_pattern):
+            x, a = apply_block(
+                kind, unit_params[f"b{j}"], x, positions, cfg, ctx,
+                use_kernel=use_kernel,
+            )
+            aux = aux + a
+        return (x, aux), None
+
+    if remat:
+        unit_fn = jax.checkpoint(unit_fn)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.units > 0:
+        (x, aux), _ = jax.lax.scan(unit_fn, (x, aux0), params["units"])
+    else:
+        aux = aux0
+    for j, kind in enumerate(cfg.tail):
+        x, a = apply_block(
+            kind, params["tail"][j], x, positions, cfg, ctx, use_kernel=use_kernel
+        )
+        aux = aux + a
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if "head" in params:
+        logits = L.dense(params["head"], x).astype(jnp.float32)
+    else:
+        logits = L.unembed(params["embed"], x)
+    logits = ctx.wsc(logits, ctx.dp, None, ctx.tp_axis)
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+AUX_LOSS_COEF = 0.01
+Z_LOSS_COEF = 1e-4
+
+
+def loss_fn(
+    params: Params,
+    batch: dict,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    *,
+    remat: bool = True,
+) -> tuple[jax.Array, dict]:
+    """Cross-entropy (+ MoE aux + z-loss).  batch must contain 'labels'."""
+    logits, aux = forward(params, batch, cfg, ctx, remat=remat)
+    labels = batch["labels"]
+    # Align: logits over the full stream; labels may cover the token tail
+    # only (VLM: vision prefix has no labels).
+    s_lab = labels.shape[1]
+    logits = logits[:, -s_lab:, :]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = ((logz - ll) * mask).sum() / denom
+    z_loss = Z_LOSS_COEF * ((logz * mask) ** 2).sum() / denom
+    total = ce + z_loss + AUX_LOSS_COEF * aux
+    metrics = {"ce": ce, "z_loss": z_loss, "aux": aux, "loss": total}
+    return total, metrics

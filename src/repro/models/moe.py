@@ -1,0 +1,248 @@
+"""Mixture-of-Experts layer with expert parallelism over the TP axis.
+
+MoE *is* block-sparse tensor computing: each token-group × expert pair is
+a nonuniformly-sized block of a block-diagonal matmul — the irregular
+structure the paper targets.  The layer distributes experts over
+``ctx.tp_axis`` (EP) inside a ``shard_map``:
+
+  1. Router (fp32) + top-k on the replicated activation stream.
+  2. Each EP shard gathers only the token copies routed to ITS experts
+     into a static per-expert capacity buffer (sorted dispatch, no
+     all-to-all, no one-hot blow-up; overflow copies are dropped —
+     standard capacity discipline).
+  3. Batched per-expert GEMMs over the buffer (exactly the active FLOPs,
+     modulo capacity padding).
+  4. Each shard scatters its partial outputs back to token order;
+     a single ``psum`` over the EP axis combines shards (same collective
+     cost as a Megatron TP FFN: one all-reduce of the activations).
+
+Experts are zero-padded to a multiple of the EP degree so a single mesh
+axis serves any expert count (e.g. Mixtral's 8 experts on a 16-way axis).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import ParallelCtx
+from repro.models import layers as L
+from repro.models.config import ModelConfig, MoEConfig
+
+from jax.sharding import PartitionSpec as P
+
+
+def padded_experts(moe: MoEConfig, ep: int) -> int:
+    return -(-moe.num_experts // ep) * ep
+
+
+def capacity(moe: MoEConfig, seq: int, e_pad: int) -> int:
+    c = math.ceil(seq * moe.top_k / e_pad * moe.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def init_moe(rng, cfg: ModelConfig, ctx: ParallelCtx, dtype=jnp.bfloat16) -> dict:
+    moe = cfg.moe
+    assert moe is not None
+    d, f = cfg.d_model, moe.d_ff
+    e_pad = padded_experts(moe, ctx.tp_size)
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "norm": L.init_rmsnorm(d),
+        "router": {
+            "w": jax.random.normal(k1, (d, moe.num_experts), jnp.float32) * std
+        },
+        "w_gate": (jax.random.normal(k2, (e_pad, d, f), jnp.float32) * std).astype(dtype),
+        "w_up": (jax.random.normal(k3, (e_pad, d, f), jnp.float32) * std).astype(dtype),
+        "w_down": (jax.random.normal(k4, (e_pad, f, d), jnp.float32) / math.sqrt(f)).astype(dtype),
+    }
+    if moe.num_shared_experts:
+        fs = moe.d_ff * moe.num_shared_experts
+        shared_cfg = ModelConfig(
+            name="shared",
+            family="dense",
+            num_layers=1,
+            d_model=d,
+            num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads,
+            d_ff=fs,
+            vocab_size=1,
+            activation="swiglu",
+        )
+        from repro.models.ffn import init_ffn
+
+        p["shared"] = init_ffn(k5, shared_cfg, dtype=dtype)
+    return p
+
+
+def _dispatch_compute_combine(
+    h_loc, topi, gates, w_gate, w_up, w_down, *, e_pad, top_k, cap, tp_axis
+):
+    """shard_map body: EP-local dispatch -> expert GEMMs -> combine."""
+    ep_idx = jax.lax.axis_index(tp_axis)
+    e_loc = w_gate.shape[0]
+    b, s, d = h_loc.shape
+    tk = s * top_k
+
+    eid = topi.reshape(b, tk)
+    order = jnp.argsort(eid, axis=-1, stable=True)  # (B, Tk)
+    inv = jnp.argsort(order, axis=-1)  # sorted position of each copy
+    counts = jax.vmap(functools.partial(jnp.bincount, length=e_pad))(eid)
+    offsets = jnp.cumsum(counts, axis=-1) - counts  # (B, E_pad)
+
+    # ---- gather my experts' token copies into (B, E_loc, C, D) buffers
+    my_experts = ep_idx * e_loc + jnp.arange(e_loc)  # (E_loc,)
+    my_counts = jnp.take_along_axis(
+        counts, jnp.broadcast_to(my_experts[None], (b, e_loc)), axis=-1
+    )  # (B, E_loc)
+    my_offsets = jnp.take_along_axis(
+        offsets, jnp.broadcast_to(my_experts[None], (b, e_loc)), axis=-1
+    )
+    slot = my_offsets[:, :, None] + jnp.arange(cap)[None, None, :]  # (B,E_loc,C)
+    slot_valid = jnp.arange(cap)[None, None, :] < my_counts[:, :, None]
+    slot_c = jnp.clip(slot, 0, tk - 1).reshape(b, -1)
+    copy_idx = jnp.take_along_axis(order, slot_c, axis=-1)  # (B, E_loc*C)
+    tok_idx = copy_idx // top_k
+    x_buf = jnp.take_along_axis(
+        h_loc, tok_idx[:, :, None], axis=1
+    )  # (B, E_loc*C, D)
+    x_buf = jnp.where(slot_valid.reshape(b, -1, 1), x_buf, 0)
+    x_buf = x_buf.reshape(b, e_loc, cap, d)
+
+    # ---- expert GEMMs (SwiGLU)
+    g = jnp.einsum("becd,edf->becf", x_buf, w_gate)
+    u = jnp.einsum("becd,edf->becf", x_buf, w_up)
+    mid = jax.nn.silu(g) * u
+    y_buf = jnp.einsum("becf,efd->becd", mid, w_down)  # (B, E_loc, C, D)
+
+    # ---- combine back to token order (partial: only my experts)
+    rank = inv - jnp.take_along_axis(offsets, eid, axis=-1)  # (B, Tk)
+    mine = (eid // e_loc) == ep_idx
+    keep = mine & (rank < cap)
+    local_e = jnp.clip(eid - ep_idx * e_loc, 0, e_loc - 1)
+    flat = jnp.clip(local_e * cap + rank, 0, e_loc * cap - 1)
+    z = jnp.take_along_axis(
+        y_buf.reshape(b, e_loc * cap, d), flat[:, :, None], axis=1
+    )  # (B, Tk, D)
+    z = jnp.where(keep[:, :, None], z, 0)
+    z = z.reshape(b, s, top_k, d) * gates[..., None].astype(z.dtype)
+    y = z.sum(axis=2)
+    return jax.lax.psum(y, tp_axis)
+
+
+def moe_ffn(
+    p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss)."""
+    moe = cfg.moe
+    assert moe is not None
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    b, s, d = h.shape
+
+    logits = jnp.einsum(
+        "bsd,de->bse", h.astype(jnp.float32), p["router"]["w"]
+    )  # fp32 router
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(logits, moe.top_k)
+    gates = jax.nn.softmax(topv, axis=-1)  # renormalize over selected
+
+    # Switch-style load-balance aux loss.
+    density = jnp.mean(
+        jax.nn.one_hot(topi[..., 0], moe.num_experts, dtype=jnp.float32),
+        axis=(0, 1),
+    )
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = moe.num_experts * jnp.sum(density * mean_prob)
+
+    e_pad = padded_experts(moe, ctx.tp_size)
+    cap = capacity(moe, s, e_pad)
+
+    if ctx.mesh is None or ctx.mesh.empty:
+        # single-device fallback: one "shard" holding all experts
+        y = _dispatch_compute_combine_local(
+            h, topi, gates, p["w_gate"], p["w_up"], p["w_down"],
+            e_pad=e_pad, top_k=moe.top_k, cap=cap,
+        )
+    else:
+        body = functools.partial(
+            _dispatch_compute_combine,
+            e_pad=e_pad,
+            top_k=moe.top_k,
+            cap=cap,
+            tp_axis=ctx.tp_axis,
+        )
+        bspec = ctx.dp if b % max(ctx.dp_size, 1) == 0 else None
+        act = P(bspec, None, None)
+        y = jax.shard_map(
+            body,
+            mesh=ctx.mesh,
+            in_specs=(
+                act,
+                act,
+                act,
+                P(ctx.tp_axis, None, None),
+                P(ctx.tp_axis, None, None),
+                P(ctx.tp_axis, None, None),
+            ),
+            out_specs=act,
+            check_vma=False,
+        )(h, topi, gates, p["w_gate"], p["w_up"], p["w_down"])
+
+    if "shared" in p:
+        from repro.models.ffn import ffn as dense_ffn
+
+        shared_cfg = cfg
+        # shared expert consumes the same normed input; reuse ffn on raw x
+        # with its own norm inside -> pass x (it has its own norm params? no)
+        # ffn() norms internally with p["shared"]["norm"].
+        y = y + dense_ffn(p["shared"], x, _shared_view(cfg), ctx)
+    return y.astype(x.dtype), aux
+
+
+def _shared_view(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg, activation="swiglu",
+        d_ff=cfg.moe.d_ff * cfg.moe.num_shared_experts,
+    )
+
+
+def _dispatch_compute_combine_local(
+    h, topi, gates, w_gate, w_up, w_down, *, e_pad, top_k, cap
+):
+    """Mesh-free single-shard version (smoke tests): EP degree 1."""
+
+    class _Ax:
+        pass
+
+    b, s, d = h.shape
+    tk = s * top_k
+    e_loc = w_gate.shape[0]
+    eid = topi.reshape(b, tk)
+    order = jnp.argsort(eid, axis=-1, stable=True)
+    inv = jnp.argsort(order, axis=-1)
+    counts = jax.vmap(functools.partial(jnp.bincount, length=e_pad))(eid)
+    offsets = jnp.cumsum(counts, axis=-1) - counts
+    slot = offsets[:, :, None] + jnp.arange(cap)[None, None, :]
+    slot_valid = jnp.arange(cap)[None, None, :] < counts[:, :, None]
+    slot_c = jnp.clip(slot, 0, tk - 1).reshape(b, -1)
+    copy_idx = jnp.take_along_axis(order, slot_c, axis=-1)
+    tok_idx = copy_idx // top_k
+    x_buf = jnp.take_along_axis(h, tok_idx[:, :, None], axis=1)
+    x_buf = jnp.where(slot_valid.reshape(b, -1, 1), x_buf, 0)
+    x_buf = x_buf.reshape(b, e_loc, cap, d)
+    g = jnp.einsum("becd,edf->becf", x_buf, w_gate)
+    u = jnp.einsum("becd,edf->becf", x_buf, w_up)
+    mid = jax.nn.silu(g) * u
+    y_buf = jnp.einsum("becf,efd->becd", mid, w_down)
+    rank = inv - jnp.take_along_axis(offsets, eid, axis=-1)
+    keep = rank < cap
+    flat = jnp.clip(eid * cap + rank, 0, e_loc * cap - 1)
+    z = jnp.take_along_axis(y_buf.reshape(b, e_loc * cap, d), flat[:, :, None], axis=1)
+    z = jnp.where(keep[:, :, None], z, 0)
+    z = z.reshape(b, s, top_k, d) * gates[..., None].astype(z.dtype)
+    return z.sum(axis=2)

@@ -1,0 +1,445 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma), mLSTM and sLSTM (xLSTM).
+
+Training uses parallel forms: the RG-LRU diagonal linear recurrence is a
+``lax.associative_scan``; the mLSTM matrix memory uses the stabilized
+quadratic (attention-like) parallel form from the xLSTM paper; the sLSTM
+is an inherently sequential ``lax.scan`` (it has recurrent nonlinearity).
+
+Each block also exposes a single-token ``*_step`` used by the serving
+path — recurrent state is O(1) in sequence length, which is what makes
+the ``long_500k`` decode cell feasible for these architectures.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import ParallelCtx
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+_RGLRU_C = 8.0
+
+
+# =========================== RG-LRU block ===================================
+
+
+def init_rglru_block(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    dr = d  # lru width = d_model
+    ks = jax.random.split(rng, 6)
+    # Λ init so that a = exp(-c softplus(Λ)) spreads over (0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, dr)) / _RGLRU_C))
+    return {
+        "norm": L.init_rmsnorm(d),
+        "w_x": L.init_dense(ks[0], d, dr, dtype=dtype),
+        "w_gate": L.init_dense(ks[1], d, dr, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, dr), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_input_gate": L.init_dense(ks[3], dr, dr, dtype=dtype),
+        "w_rec_gate": L.init_dense(ks[4], dr, dr, dtype=dtype),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": L.init_dense(ks[5], dr, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S; x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b
+
+
+def _rglru_gates(p, u):
+    """Gate computations shared by scan and step paths; u (..., Dr)."""
+    r = jax.nn.sigmoid(L.dense(p["w_rec_gate"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense(p["w_input_gate"], u).astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lambda"]) * r  # (..., Dr) fp32
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, gated_in
+
+
+def rglru_block(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    *,
+    return_state: bool = False,
+):
+    """(B, S, D) -> (B, S, D) recurrent sublayer (residual by caller)."""
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    u = L.dense(p["w_x"], h)
+    u_pre = u
+    u = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, b = _rglru_gates(p, u)
+
+    # y_t = a_t * y_{t-1} + b_t  via associative scan over S
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, y = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(L.dense(p["w_gate"], h).astype(jnp.float32))
+    out = L.dense(p["w_out"], (y * gate).astype(x.dtype))
+    out = ctx.wsc(out, ctx.dp, None, None)
+    if return_state:
+        s = x.shape[1]
+        pad = jnp.zeros((x.shape[0], max(0, 3 - s), u_pre.shape[-1]), jnp.float32)
+        hist = jnp.concatenate(
+            [pad, u_pre[:, max(0, s - 3) :, :].astype(jnp.float32)], axis=1
+        )
+        state = {"h": y[:, -1, :], "conv": hist}
+        return out, state
+    return out
+
+
+def rglru_init_state(p: dict, batch: int) -> dict:
+    dr = p["lambda"].shape[0]
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, 3, dr), jnp.float32),  # last K-1 inputs
+    }
+
+
+def rglru_step(p: dict, x_t: jax.Array, state: dict, cfg: ModelConfig):
+    """x_t (B, D) one token; returns (y_t, new_state)."""
+    h = L.rmsnorm(p["norm"], x_t, cfg.norm_eps)
+    u = L.dense(p["w_x"], h)
+    hist = jnp.concatenate([state["conv"], u[:, None, :].astype(jnp.float32)], 1)
+    w = p["conv_w"].astype(jnp.float32)
+    u_c = (hist * w[None]).sum(1) + p["conv_b"].astype(jnp.float32)
+    u_c = u_c.astype(u.dtype)
+    a, b = _rglru_gates(p, u_c)
+    y = a * state["h"] + b
+    gate = jax.nn.gelu(L.dense(p["w_gate"], h).astype(jnp.float32))
+    out = L.dense(p["w_out"], (y * gate).astype(x_t.dtype))
+    return out, {"h": y, "conv": hist[:, 1:, :]}
+
+
+# ============================== mLSTM block =================================
+
+
+def init_mlstm_block(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    di = 2 * d  # inner expansion 2x (xLSTM-1.3b default)
+    ks = jax.random.split(rng, 7)
+    return {
+        "norm": L.init_rmsnorm(d),
+        "w_in": L.init_dense(ks[0], d, 2 * di, dtype=dtype),  # x_m and gate z
+        "conv_w": (jax.random.normal(ks[1], (4, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_q": L.init_dense(ks[2], di, di, dtype=dtype),
+        "w_k": L.init_dense(ks[3], di, di, dtype=dtype),
+        "w_v": L.init_dense(ks[4], di, di, dtype=dtype),
+        "w_if": L.init_dense(ks[5], di, 2 * cfg.num_heads, dtype=dtype),
+        "head_norm": L.init_rmsnorm(di // cfg.num_heads),
+        "w_out": L.init_dense(ks[6], di, d, dtype=dtype),
+    }
+
+
+def _mlstm_core_chunked(q, k, v, i_pre, f_pre, chunk: int):
+    """Chunkwise-parallel mLSTM: O(S·C) D-matrices instead of O(S²).
+
+    Within each chunk the stabilized quadratic form runs as usual; across
+    chunks the matrix memory (C, n, m) is carried recurrently (the same
+    closed-form state the serving path uses).  Exact match to the parallel
+    form up to fp rounding; the memory roofline term drops by ~S/C.
+    """
+    b, h, s, dh = q.shape
+    if s % chunk:
+        return _mlstm_core(q, k, v, i_pre, f_pre)
+    n_chunks = s // chunk
+    qf = q.astype(jnp.float32).reshape(b, h, n_chunks, chunk, dh)
+    kf = k.astype(jnp.float32).reshape(b, h, n_chunks, chunk, dh)
+    vf = v.astype(jnp.float32).reshape(b, h, n_chunks, chunk, dh)
+    i_c = i_pre.astype(jnp.float32).reshape(b, h, n_chunks, chunk)
+    lf_c = jax.nn.log_sigmoid(f_pre.astype(jnp.float32)).reshape(
+        b, h, n_chunks, chunk
+    )
+    scale = 1.0 / math.sqrt(dh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        c_st, n_st, m_in = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qc, kc, vc, ic, lfc = xs  # (B,H,C,dh) etc.
+        cum_f = jnp.cumsum(lfc, axis=-1)  # inclusive F_t
+        # intra-chunk pairwise weights
+        dmat = cum_f[..., :, None] - cum_f[..., None, :] + ic[..., None, :]
+        dmat = jnp.where(causal, dmat, -jnp.inf)
+        inter = cum_f + m_in[..., None]  # (B,H,C): weight of carried state
+        m_t = jnp.maximum(jnp.max(dmat, axis=-1), inter)
+        w_intra = jnp.exp(dmat - m_t[..., None])  # (B,H,C,C)
+        w_inter = jnp.exp(inter - m_t)  # (B,H,C)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qc * scale, kc)
+        sw = scores * w_intra
+        num = jnp.einsum("bhts,bhsd->bhtd", sw, vc)
+        num = num + w_inter[..., None] * jnp.einsum(
+            "bhtd,bhde->bhte", qc * scale, c_st
+        )
+        den = sw.sum(-1) + w_inter * jnp.einsum("bhtd,bhd->bht", qc * scale, n_st)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h_out = num / den[..., None]
+        # end-of-chunk state update
+        f_total = cum_f[..., -1]  # (B,H)
+        rel = f_total[..., None] - cum_f + ic  # (B,H,C)
+        m_out = jnp.maximum(f_total + m_in, jnp.max(rel, axis=-1))
+        w_st = jnp.exp(rel - m_out[..., None])
+        decay = jnp.exp(f_total + m_in - m_out)
+        c_new = decay[..., None, None] * c_st + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_st, kc, vc
+        )
+        n_new = decay[..., None] * n_st + jnp.einsum("bhs,bhsd->bhd", w_st, kc)
+        return (c_new, n_new, m_out), h_out
+
+    init = (
+        jnp.zeros((b, h, dh, dh), jnp.float32),
+        jnp.zeros((b, h, dh), jnp.float32),
+        jnp.full((b, h), -1e30, jnp.float32),
+    )
+    xs = (
+        qf.transpose(2, 0, 1, 3, 4),
+        kf.transpose(2, 0, 1, 3, 4),
+        vf.transpose(2, 0, 1, 3, 4),
+        i_c.transpose(2, 0, 1, 3),
+        lf_c.transpose(2, 0, 1, 3),
+    )
+    _, hs = jax.lax.scan(body, init, xs)  # (n_chunks, B, H, C, dh)
+    return hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+
+
+def _mlstm_core(q, k, v, i_pre, f_pre):
+    """Stabilized parallel mLSTM; q/k/v (B, H, S, dh); gates (B, H, S)."""
+    b, h, s, dh = q.shape
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # (B,H,S)
+    cum_f = jnp.cumsum(log_f, axis=-1)
+    # D[t, s] = cumF_t - cumF_s + i_s  for s <= t
+    dmat = cum_f[..., :, None] - cum_f[..., None, :] + i_pre.astype(jnp.float32)[..., None, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(causal, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1, keepdims=True)  # (B,H,S,1)
+    w = jnp.exp(dmat - m)
+    scores = jnp.einsum(
+        "bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(dh)
+    sw = scores * w
+    norm = jnp.maximum(jnp.abs(sw.sum(-1, keepdims=True)), jnp.exp(-m))
+    out = jnp.einsum("bhts,bhsd->bhtd", sw / norm, v.astype(jnp.float32))
+    return out
+
+
+def mlstm_block(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    *,
+    return_state: bool = False,
+):
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    h_in = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    xz = L.dense(p["w_in"], h_in)
+    x_m, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+    di = x_m.shape[-1]
+    dh = di // nh
+    x_c = jax.nn.silu(_causal_conv(x_m, p["conv_w"], p["conv_b"]))
+    q = L.dense(p["w_q"], x_c).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    k = L.dense(p["w_k"], x_c).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    v = L.dense(p["w_v"], x_m).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    i_f = L.dense(p["w_if"], x_c)  # (B, S, 2H)
+    i_pre, f_pre = jnp.split(i_f.transpose(0, 2, 1), 2, axis=1)  # (B,H,S)
+    if ctx.mlstm_chunk is not None and s > ctx.mlstm_chunk:
+        core = _mlstm_core_chunked(q, k, v, i_pre, f_pre, ctx.mlstm_chunk)
+    else:
+        core = _mlstm_core(q, k, v, i_pre, f_pre)  # (B,H,S,dh) fp32
+    core = L.rmsnorm(p["head_norm"], core.astype(x.dtype), cfg.norm_eps)
+    core = core.transpose(0, 2, 1, 3).reshape(b, s, di)
+    out = L.dense(p["w_out"], core * jax.nn.silu(z))
+    out = ctx.wsc(out, ctx.dp, None, None)
+    if return_state:
+        # closed-form final state of the recurrence (no sequential scan):
+        # m_S = max_s(i_s + F_S - F_s); C = sum_s e^{i_s+F_S-F_s-m_S} k v^T
+        log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+        cum_f = jnp.cumsum(log_f, axis=-1)
+        rel = cum_f[..., -1:] - cum_f + i_pre.astype(jnp.float32)  # (B,H,S)
+        m_state = jnp.max(rel, axis=-1)  # (B,H)
+        w = jnp.exp(rel - m_state[..., None])  # (B,H,S)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        c_state = jnp.einsum("bhs,bhsd,bhse->bhde", w, kf, vf)
+        n_state = jnp.einsum("bhs,bhsd->bhd", w, kf)
+        pad = jnp.zeros((b, max(0, 3 - s), di), jnp.float32)
+        hist = jnp.concatenate(
+            [pad, x_m[:, max(0, s - 3) :, :].astype(jnp.float32)], axis=1
+        )
+        state = {"c": c_state, "n": n_state, "m": m_state, "conv": hist}
+        return out, state
+    return out
+
+
+def mlstm_init_state(p: dict, cfg: ModelConfig, batch: int) -> dict:
+    di = p["w_q"]["w"].shape[1]
+    nh = cfg.num_heads
+    dh = di // nh
+    return {
+        "c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), jnp.float32),
+    }
+
+
+def mlstm_step(p: dict, x_t: jax.Array, state: dict, cfg: ModelConfig):
+    b, d = x_t.shape
+    nh = cfg.num_heads
+    h_in = L.rmsnorm(p["norm"], x_t, cfg.norm_eps)
+    xz = L.dense(p["w_in"], h_in)
+    x_m, z = jnp.split(xz, 2, axis=-1)
+    di = x_m.shape[-1]
+    dh = di // nh
+    hist = jnp.concatenate([state["conv"], x_m[:, None, :].astype(jnp.float32)], 1)
+    w = p["conv_w"].astype(jnp.float32)
+    x_c = jax.nn.silu((hist * w[None]).sum(1) + p["conv_b"].astype(jnp.float32))
+    x_c = x_c.astype(x_m.dtype)
+    q = L.dense(p["w_q"], x_c).reshape(b, nh, dh).astype(jnp.float32)
+    k = L.dense(p["w_k"], x_c).reshape(b, nh, dh).astype(jnp.float32)
+    v = L.dense(p["w_v"], x_m).reshape(b, nh, dh).astype(jnp.float32)
+    i_f = L.dense(p["w_if"], x_c).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(i_f, 2, axis=-1)  # (B, H)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    i_s = jnp.exp(i_pre - m_new)
+    c = f_s[..., None, None] * state["c"] + i_s[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    qn = q / math.sqrt(dh)
+    num = jnp.einsum("bhd,bhde->bhe", qn, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qn, n)), jnp.exp(-m_new))
+    core = num / den[..., None]
+    core = L.rmsnorm(p["head_norm"], core.astype(x_t.dtype), cfg.norm_eps)
+    out = L.dense(p["w_out"], core.reshape(b, di) * jax.nn.silu(z))
+    new_state = {"c": c, "n": n, "m": m_new, "conv": hist[:, 1:, :]}
+    return out, new_state
+
+
+# ============================== sLSTM block =================================
+
+
+def init_slstm_block(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    ks = jax.random.split(rng, 4)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "norm": L.init_rmsnorm(d),
+        # 4 gates (i, f, z, o) from input
+        "w_gates": L.init_dense(ks[0], d, 4 * d, dtype=dtype),
+        # block-diagonal recurrent weights per head, per gate
+        "r_gates": (
+            jax.random.normal(ks[1], (4, nh, dh, dh), jnp.float32) * std
+        ).astype(dtype),
+        "head_norm": L.init_rmsnorm(dh),
+        # 4/3 expansion rounded up to 128 so TP/FSDP sharding divides evenly
+        "w_up": L.init_dense(ks[2], d, _slstm_ff(d), dtype=dtype),
+        "w_down": L.init_dense(ks[3], _slstm_ff(d), d, dtype=dtype),
+    }
+
+
+def _slstm_ff(d: int) -> int:
+    return max(128, -(-(4 * d // 3) // 128) * 128)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, gates_x_t, state, nh):
+    """One sLSTM time step; gates_x_t (B, 4D) precomputed input part."""
+    b = gates_x_t.shape[0]
+    d = gates_x_t.shape[-1] // 4
+    dh = d // nh
+    h_prev = state["h"].reshape(b, nh, dh)
+    rec = jnp.einsum(
+        "bhd,ghde->gbhe", h_prev.astype(jnp.float32), p["r_gates"].astype(jnp.float32)
+    ).reshape(4, b, d)
+    gx = gates_x_t.astype(jnp.float32).reshape(b, 4, d).transpose(1, 0, 2)
+    i_pre, f_pre, z_pre, o_pre = (gx[g] + rec[g] for g in range(4))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = f_s * state["c"] + i_s * z
+    n = f_s * state["n"] + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h}
+
+
+def slstm_block(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    *,
+    return_state: bool = False,
+):
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    h_in = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    gates_x = L.dense(p["w_gates"], h_in)  # (B, S, 4D)
+    if ctx.slstm_replicated:
+        # keep the whole recurrence TP-replicated: one all-gather here
+        # instead of per-timestep collectives inside the scan
+        gates_x = ctx.wsc(gates_x, ctx.dp, None, None)
+
+    def step(state, g_t):
+        new = _slstm_cell(p, g_t, state, nh)
+        return new, new["h"]
+
+    state0 = slstm_init_state(cfg, b)
+    final_state, hs = jax.lax.scan(step, state0, gates_x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)  # (B, S, D)
+    hs = L.rmsnorm(
+        p["head_norm"], hs.reshape(b, s, nh, d // nh).astype(x.dtype), cfg.norm_eps
+    ).reshape(b, s, d)
+    # small post-FFN (4/3 expansion, xLSTM style)
+    up = jax.nn.gelu(L.dense(p["w_up"], hs))
+    out = L.dense(p["w_down"], up)
+    out = ctx.wsc(out, ctx.dp, None, None)
+    if return_state:
+        return out, final_state
+    return out
+
+
+def slstm_step(p: dict, x_t: jax.Array, state: dict, cfg: ModelConfig):
+    b, d = x_t.shape
+    nh = cfg.num_heads
+    h_in = L.rmsnorm(p["norm"], x_t, cfg.norm_eps)
+    g_t = L.dense(p["w_gates"], h_in)
+    new = _slstm_cell(p, g_t, state, nh)
+    hs = L.rmsnorm(
+        p["head_norm"], new["h"].reshape(b, nh, d // nh).astype(x_t.dtype), cfg.norm_eps
+    ).reshape(b, d)
+    up = jax.nn.gelu(L.dense(p["w_up"], hs))
+    out = L.dense(p["w_down"], up)
+    return out, new

@@ -1,0 +1,1 @@
+"""Serving: KV/recurrent caches, prefill, decode."""

@@ -1,0 +1,442 @@
+"""Serving engine: batched prefill + single-token decode with caches.
+
+Cache kinds per block:
+
+* ``attn``  — KV cache (B, Hkv, S_cache, Dh); rolling ring buffer of size
+  ``window`` for sliding/local-attention archs, so the ``long_500k`` cell
+  holds only O(window) state.  Decode attention shards the cache's S
+  dimension over the TP axis and combines partial softmaxes with the
+  log-sum-exp trick (flash-decoding on the mesh).
+* ``rglru`` / ``mlstm`` / ``slstm`` — O(1) recurrent state; prefill
+  derives the closed-form final state (no sequential pass where the math
+  allows it).
+
+Layout mirrors the model: stacked caches per scan unit + unrolled tail.
+``pos`` counts tokens written so far.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.context import ParallelCtx
+from repro.models import layers as L
+from repro.models.attention import _project_qkv, attention
+from repro.models.config import ModelConfig
+from repro.models.ffn import ffn
+from repro.models.model import embed_inputs
+from repro.models.moe import moe_ffn
+from repro.models.recurrent import (
+    mlstm_block,
+    mlstm_step,
+    rglru_block,
+    rglru_step,
+    slstm_block,
+    slstm_step,
+)
+
+__all__ = ["init_cache", "prefill", "decode_step", "cache_len"]
+
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+# ---------------------------------------------------------------------------
+# cache init (abstract-friendly: pure shapes)
+# ---------------------------------------------------------------------------
+
+
+def _quantize_kv(x: jax.Array):
+    """(.., S, Dh) -> int8 values + per-(token, head) fp32 absmax scales."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _block_cache(
+    kind: str, cfg: ModelConfig, batch: int, max_len: int, kv_quant: bool = False
+):
+    dh = cfg.resolved_head_dim
+    dtype = jnp.dtype(cfg.dtype)
+    if kind == "attn":
+        s_c = cache_len(cfg, max_len)
+        shape = (batch, cfg.num_kv_heads, s_c, dh)
+        if kv_quant:
+            sshape = (batch, cfg.num_kv_heads, s_c, 1)
+            return {
+                "k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(sshape, jnp.float32),
+                "v_s": jnp.zeros(sshape, jnp.float32),
+            }
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    d = cfg.d_model
+    if kind == "rglru":
+        return {
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "conv": jnp.zeros((batch, 3, d), jnp.float32),
+        }
+    if kind == "mlstm":
+        di = 2 * d
+        nh = cfg.num_heads
+        dh_i = di // nh
+        return {
+            "c": jnp.zeros((batch, nh, dh_i, dh_i), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh_i), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, 3, di), jnp.float32),
+        }
+    if kind == "slstm":
+        return {
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.ones((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, kv_quant: bool = False
+):
+    def unit_cache(_):
+        return {
+            f"b{j}": _block_cache(kind, cfg, batch, max_len, kv_quant)
+            for j, kind in enumerate(cfg.block_pattern)
+        }
+
+    units = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.units,) + x.shape).copy()
+        if cfg.units
+        else x[None][:0],
+        unit_cache(None),
+    )
+    tail = [
+        _block_cache(kind, cfg, batch, max_len, kv_quant) for kind in cfg.tail
+    ]
+    return {"units": units, "tail": tail, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_shardings(cache, ctx: ParallelCtx):
+    """KV caches: batch over DP, S over TP (seq-sharded decode attention);
+    recurrent states: batch over DP."""
+    def spec(leaf):
+        if leaf.ndim >= 4 and leaf.shape[-1] != 3:  # stacked KV: (U,B,H,S,D)
+            # (units?, B, Hkv, S, Dh): S axis = -2
+            base = [None] * leaf.ndim
+            base[-4] = ctx.dp  # B
+            base[-2] = ctx.tp_axis  # S
+            return ctx.named(*base)
+        base = [None] * leaf.ndim
+        if leaf.ndim >= 1:
+            pass
+        return ctx.named(*base)
+
+    return jax.tree.map(spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def _prefill_block(kind, p, x, positions, cfg, ctx, batch, max_len):
+    if kind == "attn":
+        o, (k, v) = attention(
+            p["attn"], x, positions, cfg, ctx, window=cfg.window,
+            use_kernel=False, return_kv=True,
+        )
+        x = x + o
+        if "moe" in p:
+            y, _ = moe_ffn(p["moe"], x, cfg, ctx)
+            x = x + y
+        elif "ffn" in p:
+            x = x + ffn(p["ffn"], x, cfg, ctx)
+        s = k.shape[2]
+        s_c = cache_len(cfg, max_len)
+        if s >= s_c:
+            # keep the last s_c keys, packed in ring order slot = t % s_c
+            t0 = s - s_c
+            idx = t0 + jnp.arange(s_c)  # tokens kept: [s-s_c, s)
+            ring_slot = idx % s_c
+            k_keep = jnp.take(k, idx, axis=2)
+            v_keep = jnp.take(v, idx, axis=2)
+            k_cache = jnp.zeros_like(k_keep)
+            v_cache = jnp.zeros_like(v_keep)
+            k_cache = k_cache.at[:, :, ring_slot, :].set(k_keep)
+            v_cache = v_cache.at[:, :, ring_slot, :].set(v_keep)
+        else:
+            pad = s_c - s
+            k_cache = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v_cache = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if ctx.kv_quant:
+            kq, ks = _quantize_kv(k_cache)
+            vq, vs = _quantize_kv(v_cache)
+            return x, {"k": kq, "k_s": ks, "v": vq, "v_s": vs}
+        return x, {"k": k_cache, "v": v_cache}
+    if kind == "rglru":
+        o, st = rglru_block(p["rec"], x, cfg, ctx, return_state=True)
+        x = x + o
+        x = x + ffn(p["ffn"], x, cfg, ctx)
+        return x, st
+    if kind == "mlstm":
+        o, st = mlstm_block(p["rec"], x, cfg, ctx, return_state=True)
+        return x + o, st
+    if kind == "slstm":
+        o, st = slstm_block(p["rec"], x, cfg, ctx, return_state=True)
+        return x + o, st
+    raise ValueError(kind)
+
+
+def prefill(params, inputs: dict, cfg: ModelConfig, ctx: ParallelCtx, max_len: int):
+    """Returns (last-token logits (B, V), cache)."""
+    x = embed_inputs(params, inputs, cfg)
+    b, s = x.shape[:2]
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def unit_fn(x, unit_params):
+        caches = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            x, c = _prefill_block(
+                kind, unit_params[f"b{j}"], x, positions, cfg, ctx, b, max_len
+            )
+            caches[f"b{j}"] = c
+        return x, caches
+
+    if cfg.units > 0:
+        x, unit_caches = jax.lax.scan(unit_fn, x, params["units"])
+    else:
+        unit_caches = {}
+    tail_caches = []
+    for j, kind in enumerate(cfg.tail):
+        x, c = _prefill_block(
+            kind, params["tail"][j], x, positions, cfg, ctx, b, max_len
+        )
+        tail_caches.append(c)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1, :]
+    if "head" in params:
+        logits = L.dense(params["head"], last).astype(jnp.float32)
+    else:
+        logits = L.unembed(params["embed"], last)
+    cache = {
+        "units": unit_caches,
+        "tail": tail_caches,
+        "pos": jnp.full((), s, jnp.int32),
+    }
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _local_ring_update(buf, new_val, slot, offset):
+    """Update position ``slot`` (global) in a seq-shard covering
+    [offset, offset + S_loc): only the owning shard writes — no cross-
+    shard traffic, no re-gather of the sharded cache."""
+    s_loc = buf.shape[2]
+    local = slot - offset
+    in_range = (local >= 0) & (local < s_loc)
+    lslot = jnp.clip(local, 0, s_loc - 1)
+    cur = jax.lax.dynamic_slice_in_dim(buf, lslot, 1, axis=2)
+    upd = jnp.where(in_range, new_val.astype(buf.dtype), cur)
+    return jax.lax.dynamic_update_slice_in_dim(buf, upd, lslot, axis=2)
+
+
+def _decode_attention(q, k_new, v_new, k_cache, v_cache, slot, n_valid,
+                      ctx: ParallelCtx, k_scale=None, v_scale=None):
+    """One fused decode-attention step: write the new token's K/V into the
+    seq-sharded ring caches (shard-locally) and attend with LSE combine.
+
+    q (B, H, Dh); k_new/v_new (B, Hkv, 1, Dh); caches (B, Hkv, S_c, Dh).
+    With ``k_scale``/``v_scale`` the caches are int8 and dequantized
+    in-shard (fused into the matmuls on TPU: reads stay 1 byte/elem).
+    Returns (attention output, updated caches...).
+    """
+    b, h, dh = q.shape
+    hkv = k_cache.shape[1]
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    quant = k_scale is not None
+    if quant:
+        kq_new, ks_new = _quantize_kv(k_new)
+        vq_new, vs_new = _quantize_kv(v_new)
+
+    def partial_attn(q_l, k_l, v_l, offset, ks_l=None, vs_l=None):
+        s_loc = k_l.shape[2]
+        b_l = q_l.shape[0]  # may be the per-shard batch inside shard_map
+        qg = (q_l.astype(jnp.float32) * scale).reshape(b_l, hkv, g, dh)
+        kf = k_l.astype(jnp.float32)
+        vf = v_l.astype(jnp.float32)
+        if quant:
+            kf = kf * ks_l
+            vf = vf * vs_l
+        logits = jnp.einsum("bhgd,bhsd->bhgs", qg, kf)
+        live = (offset + jnp.arange(s_loc))[None, None, None, :] < n_valid
+        logits = jnp.where(live, logits, -1e30)
+        m = jnp.max(logits, axis=-1)  # (b,hkv,g)
+        p = jnp.exp(logits - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
+        return m, l, o
+
+    if ctx.mesh is None or ctx.mesh.empty or ctx.tp_size == 1:
+        if quant:
+            k_cache = _local_ring_update(k_cache, kq_new, slot, 0)
+            v_cache = _local_ring_update(v_cache, vq_new, slot, 0)
+            k_scale = _local_ring_update(k_scale, ks_new, slot, 0)
+            v_scale = _local_ring_update(v_scale, vs_new, slot, 0)
+        else:
+            k_cache = _local_ring_update(k_cache, k_new, slot, 0)
+            v_cache = _local_ring_update(v_cache, v_new, slot, 0)
+        m, l, o = partial_attn(q, k_cache, v_cache, 0, k_scale, v_scale)
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        out = out.reshape(b, h, dh).astype(q.dtype)
+        if quant:
+            return out, k_cache, v_cache, k_scale, v_scale
+        return out, k_cache, v_cache
+
+    def body(q_l, kn_l, vn_l, k_l, v_l, *scales):
+        s_loc = k_l.shape[2]
+        offset = jax.lax.axis_index(ctx.tp_axis) * s_loc
+        if quant:
+            ks_l, vs_l, ksn_l, vsn_l = scales
+            k_l = _local_ring_update(k_l, kn_l, slot, offset)
+            v_l = _local_ring_update(v_l, vn_l, slot, offset)
+            ks_l = _local_ring_update(ks_l, ksn_l, slot, offset)
+            vs_l = _local_ring_update(vs_l, vsn_l, slot, offset)
+        else:
+            ks_l = vs_l = None
+            k_l = _local_ring_update(k_l, kn_l, slot, offset)
+            v_l = _local_ring_update(v_l, vn_l, slot, offset)
+        m, l, o = partial_attn(q_l, k_l, v_l, offset, ks_l, vs_l)
+        m_g = jax.lax.pmax(m, ctx.tp_axis)
+        corr = jnp.exp(m - m_g)
+        denom = jax.lax.psum(l * corr, ctx.tp_axis)
+        numer = jax.lax.psum(o * corr[..., None], ctx.tp_axis)
+        out = numer / jnp.maximum(denom[..., None], 1e-30)
+        out = out.reshape(q_l.shape[0], h, dh).astype(q.dtype)
+        if quant:
+            return out, k_l, v_l, ks_l, vs_l
+        return out, k_l, v_l
+
+    bspec = ctx.dp if b % max(ctx.dp_size, 1) == 0 else None
+    cache_spec = P(bspec, None, ctx.tp_axis, None)
+    new_spec = P(bspec, None, None, None)  # new token K/V: replicated on S
+    in_specs = [P(bspec, None, None), new_spec, new_spec, cache_spec, cache_spec]
+    out_specs = [P(bspec, None, None), cache_spec, cache_spec]
+    args = [q, kq_new if quant else k_new, vq_new if quant else v_new,
+            k_cache, v_cache]
+    if quant:
+        in_specs += [cache_spec, cache_spec, new_spec, new_spec]
+        out_specs += [cache_spec, cache_spec]
+        args += [k_scale, v_scale, ks_new, vs_new]
+    return jax.shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=tuple(in_specs),
+        out_specs=tuple(out_specs),
+        check_vma=False,
+    )(*args)
+
+
+def _decode_block(kind, p, x_t, positions, cache, pos, cfg, ctx):
+    """x_t (B, D) one token; returns (x_t, new_cache)."""
+    if kind == "attn":
+        h = L.rmsnorm(p["attn"]["norm"], x_t, cfg.norm_eps)
+        q, k, v = _project_qkv(
+            p["attn"], h[:, None, :], positions, cfg, ctx
+        )  # (B, 1, H, dh)
+        s_c = cache["k"].shape[2]
+        slot = pos % s_c if cfg.window is not None else jnp.minimum(pos, s_c - 1)
+        k_new = k.transpose(0, 2, 1, 3)  # (B, Hkv, 1, dh)
+        v_new = v.transpose(0, 2, 1, 3)
+        n_valid = jnp.minimum(pos + 1, s_c)
+        q_t = q.reshape(q.shape[0], q.shape[2], q.shape[3])  # (B, H, dh)
+        if ctx.kv_quant:
+            o, ck, cv, cks, cvs = _decode_attention(
+                q_t, k_new, v_new, cache["k"], cache["v"], slot, n_valid,
+                ctx, cache["k_s"], cache["v_s"],
+            )
+            new_cache = {"k": ck, "v": cv, "k_s": cks, "v_s": cvs}
+        else:
+            o, ck, cv = _decode_attention(
+                q_t, k_new, v_new, cache["k"], cache["v"], slot, n_valid, ctx
+            )
+            new_cache = {"k": ck, "v": cv}
+        o = L.dense(p["attn"]["wo"], o.reshape(x_t.shape[0], -1))
+        x_t = x_t + o
+        if "moe" in p:
+            y, _ = moe_ffn(p["moe"], x_t[:, None, :], cfg, ctx)
+            x_t = x_t + y[:, 0]
+        elif "ffn" in p:
+            x_t = x_t + ffn(p["ffn"], x_t[:, None, :], cfg, ctx)[:, 0]
+        return x_t, new_cache
+    if kind == "rglru":
+        o, st = rglru_step(p["rec"], x_t, cache, cfg)
+        x_t = x_t + o
+        x_t = x_t + ffn(p["ffn"], x_t[:, None, :], cfg, ctx)[:, 0]
+        return x_t, st
+    if kind == "mlstm":
+        o, st = mlstm_step(p["rec"], x_t, cache, cfg)
+        return x_t + o, st
+    if kind == "slstm":
+        o, st = slstm_step(p["rec"], x_t, cache, cfg)
+        return x_t + o, st
+    raise ValueError(kind)
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx):
+    """One decode step.  tokens (B,) int32 -> (logits (B, V), new cache)."""
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    x = L.embed(params["embed"], tokens) if cfg.embed_inputs else tokens
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(pos[None, None, None], (b, 1, 3)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+
+    def unit_fn(x_t, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            x_t, c = _decode_block(
+                kind, unit_params[f"b{j}"], x_t, positions, unit_cache[f"b{j}"],
+                pos, cfg, ctx,
+            )
+            new_caches[f"b{j}"] = c
+        return x_t, new_caches
+
+    if cfg.units > 0:
+        x, new_unit_caches = jax.lax.scan(
+            unit_fn, x, (params["units"], cache["units"])
+        )
+    else:
+        new_unit_caches = cache["units"]
+    new_tail = []
+    for j, kind in enumerate(cfg.tail):
+        x, c = _decode_block(
+            kind, params["tail"][j], x, positions, cache["tail"][j], pos, cfg, ctx
+        )
+        new_tail.append(c)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if "head" in params:
+        logits = L.dense(params["head"], x).astype(jnp.float32)
+    else:
+        logits = L.unembed(params["embed"], x)
+    new_cache = {"units": new_unit_caches, "tail": new_tail, "pos": pos + 1}
+    return logits, new_cache

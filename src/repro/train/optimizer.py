@@ -1,0 +1,186 @@
+"""Optimizers: AdamW (fp32 master + moments) and Adafactor (factored).
+
+Pure-pytree implementations (no optax dependency).  AdamW keeps an fp32
+master copy so bf16 params don't lose small updates.  Adafactor stores
+row/column-factored second moments and no master/first moment — the
+memory-frugal choice that lets the 1T-param kimi-k2 optimizer state fit
+512 x 16 GB (DESIGN.md §5).
+
+Both include global-norm clipping and a linear-warmup + cosine schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerConfig", "Optimizer", "make_optimizer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # "adamw" | "adafactor"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    af_eps: float = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def _schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = (step + 1.0) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.minimum(warm, cos)
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def _clip_by_norm(tree, norm, max_norm):
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * scale, tree)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return _make_adamw(cfg)
+    if cfg.name == "adafactor":
+        return _make_adafactor(cfg)
+    raise ValueError(cfg.name)
+
+
+# ---------------------------------------------------------------- AdamW
+
+
+def _make_adamw(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+        }
+
+    def update(grads, state, params, step):
+        gnorm = _global_norm(grads)
+        grads = _clip_by_norm(grads, gnorm, cfg.clip_norm)
+        lr = _schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - cfg.b1**t
+        bc2 = 1.0 - cfg.b2**t
+
+        def upd(g, m, v, master):
+            m_new = cfg.b1 * m + (1 - cfg.b1) * g
+            v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mh = m_new / bc1
+            vh = v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if master.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + cfg.weight_decay * master
+            return m_new, v_new, master - lr * delta
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_ma = treedef.flatten_up_to(state["master"])
+        new_m, new_v, new_ma = [], [], []
+        for g, mm, vv, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+            a, b, c = upd(g, mm, vv, ma)
+            new_m.append(a)
+            new_v.append(b)
+            new_ma.append(c)
+        new_state = {
+            "master": jax.tree_util.tree_unflatten(treedef, new_ma),
+            "m": jax.tree_util.tree_unflatten(treedef, new_m),
+            "v": jax.tree_util.tree_unflatten(treedef, new_v),
+        }
+        new_params = jax.tree.map(
+            lambda ma, p: ma.astype(p.dtype), new_state["master"], params
+        )
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+# ------------------------------------------------------------- Adafactor
+
+
+def _make_adafactor(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        def leaf_state(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"v": jax.tree.map(leaf_state, params)}
+
+    def update(grads, state, params, step):
+        gnorm = _global_norm(grads)
+        grads = _clip_by_norm(grads, gnorm, cfg.clip_norm)
+        lr = _schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-cfg.decay_rate)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        new_v, new_p = [], []
+        for g, v, p in zip(flat_g, flat_v, flat_p):
+            g2 = g * g + cfg.af_eps
+            if p.ndim >= 2:
+                vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                # rank-1 reconstruction of the second moment
+                denom = vr[..., :, None] * vc[..., None, :]
+                denom = denom / jnp.maximum(
+                    vr.mean(axis=-1)[..., None, None], cfg.af_eps
+                )
+                upd = g / jnp.sqrt(denom + cfg.af_eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2 * v["v"] + (1 - beta2) * g2
+                upd = g / jnp.sqrt(vv + cfg.af_eps)
+                nv = {"v": vv}
+            # update clipping by RMS (Adafactor's d=1.0 rule)
+            rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+            new_v.append(nv)
+        return (
+            jax.tree_util.tree_unflatten(treedef, new_p),
+            {"v": jax.tree_util.tree_unflatten(treedef, new_v)},
+        )
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,172 @@
+"""Train-step construction: grad accumulation, optimizer apply, sharding.
+
+``build_train_step`` returns a jit-compiled step with donated state:
+state = {"params", "opt", "step"}.  Gradients are accumulated in fp32
+over ``microbatches`` slices of the global batch (a rolled ``lax.scan``
+so activation memory is bounded by one microbatch), then the optimizer
+applies once — exact arithmetic match to the unaccumulated step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.context import ParallelCtx
+from repro.dist.partitioning import param_shardings, param_specs
+from repro.models.config import ModelConfig
+from repro.models.model import init_model, loss_fn
+from repro.train.optimizer import Optimizer, OptimizerConfig, make_optimizer
+
+__all__ = ["make_train_state", "build_train_step", "state_shardings", "batch_shardings"]
+
+
+def make_train_state(rng, cfg: ModelConfig, ctx: ParallelCtx, opt: Optimizer):
+    params = init_model(rng, cfg, ctx)
+    return {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(rng, cfg: ModelConfig, ctx: ParallelCtx, opt: Optimizer):
+    """ShapeDtypeStruct state (dry-run: no allocation)."""
+    return jax.eval_shape(lambda r: make_train_state(r, cfg, ctx, opt), rng)
+
+
+def state_shardings(state, ctx: ParallelCtx):
+    """NamedShardings for the full train state (params + opt mirrors).
+
+    With ``ctx.zero1`` params are replicated over the FSDP axis while the
+    optimizer mirrors stay FSDP-sharded: GSPMD then emits one
+    reduce-scatter(grads) + all-gather(params) per optimizer step instead
+    of per-microbatch parameter re-gathers (the ZeRO-3 <-> ZeRO-1
+    trade-off, EXPERIMENTS.md §Perf)."""
+    mesh = ctx.mesh
+    tp = not ctx.pure_dp
+    p_sh = param_shardings(state["params"], mesh, fsdp=not ctx.zero1, tp=tp)
+    opt_ref_sh = (
+        param_shardings(state["params"], mesh, fsdp=True, tp=tp)
+        if ctx.zero1
+        else p_sh
+    )
+
+    def mirror(opt_tree, params_tree, params_sh):
+        """Optimizer slots mirror their param's sharding when shapes match;
+        factored slots (adafactor vr/vc) drop the reduced dim's spec."""
+        flat_p, pdef = jax.tree_util.tree_flatten(params_tree)
+        flat_sh = pdef.flatten_up_to(params_sh)
+        by_shape = {}
+
+        def assign(leaf):
+            for p, sh in zip(flat_p, flat_sh):
+                if leaf.shape == p.shape:
+                    return sh
+                # adafactor factored: shape is p.shape minus last or
+                # second-to-last dim
+                if leaf.shape == p.shape[:-1]:
+                    spec = sh.spec
+                    return NamedSharding(mesh, P(*spec[:-1]))
+                if leaf.shape == p.shape[:-2] + p.shape[-1:]:
+                    spec = sh.spec
+                    return NamedSharding(
+                        mesh, P(*(spec[:-2] + spec[-1:]))
+                    )
+            return NamedSharding(mesh, P())
+
+        return jax.tree.map(assign, opt_tree)
+
+    return {
+        "params": p_sh,
+        "opt": mirror(state["opt"], state["params"], opt_ref_sh),
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(batch_struct, ctx: ParallelCtx):
+    mesh = ctx.mesh
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, P(ctx.dp, *([None] * (len(x.shape) - 1)))),
+        batch_struct,
+    )
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    opt: Optimizer,
+    *,
+    microbatches: int = 1,
+    remat: bool = True,
+):
+    def _constrain_grads(grads):
+        """ZeRO-1: keep gradients (and the fp32 accumulator) FSDP-sharded
+        even though params are replicated — each microbatch contributes a
+        reduce-scatter instead of a full-size replicated accumulator."""
+        if not ctx.zero1 or ctx.mesh is None or ctx.mesh.empty:
+            return grads
+        from repro.dist.partitioning import param_shardings
+
+        sh = param_shardings(grads, ctx.mesh, fsdp=True)
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, sh)
+
+    def grad_fn(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg, ctx=ctx, remat=remat),
+            has_aux=True,
+        )(params, mb)
+        return _constrain_grads(grads), metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            grads, metrics = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def slice_mb(i, x):
+                mb_size = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb_size, mb_size, 0)
+
+            def body(carry, i):
+                acc, _ = carry
+                mb = jax.tree.map(functools.partial(slice_mb, i), batch)
+                g, m = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g
+                )
+                return (acc, m), None
+
+            zeros = _constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            m0 = {
+                "ce": jnp.zeros((), jnp.float32),
+                "z_loss": jnp.zeros((), jnp.float32),
+                "aux": jnp.zeros((), jnp.float32),
+                "loss": jnp.zeros((), jnp.float32),
+            }
+            (grads, metrics), _ = jax.lax.scan(
+                body, (zeros, m0), jnp.arange(microbatches)
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt = opt.update(grads, state["opt"], params, state["step"])
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(train_step, state, batch_struct, ctx: ParallelCtx):
+    """jit with explicit state/batch shardings and donated state."""
+    st_sh = state_shardings(state, ctx)
+    b_sh = batch_shardings(batch_struct, ctx)
+    return jax.jit(
+        train_step,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, None),
+        donate_argnums=(0,),
+    )

@@ -1,0 +1,37 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real device
+count (1); multi-device behaviour is tested via subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600):
+    """Run python code in a fresh process with N emulated host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

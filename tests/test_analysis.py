@@ -1,0 +1,73 @@
+"""HLO analysis: weighting math on a synthetic module + a real lowered
+scan (trip-count weighting of dot FLOPs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze_hlo, roofline
+
+SYNTH = """\
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %i0 = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%i0, %a)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"},"known_init_step":{"init":"0","step":"1"}}
+  %g = f32[8,8]{1,0} get-tuple-element(%w), index=1
+  ROOT %d2 = f32[8,8]{1,0} dot(%g, %g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_synthetic_module_weighting():
+    wc = analyze_hlo(SYNTH)
+    one_dot = 2 * 8 * 8 * 8
+    assert wc.flops == 5 * one_dot + one_dot  # loop body x5 + entry dot
+    assert wc.coll_bytes_by_op["all-reduce"] == 5 * 8 * 8 * 4
+    assert wc.coll_counts_by_op["all-reduce"] == 5
+
+
+def test_real_scan_weighting():
+    """A scan of N matmuls must report ~N x the flops of one matmul."""
+    n, d = 7, 64
+
+    def f(x):
+        def body(c, _):
+            return jnp.dot(c, c, preferred_element_type=jnp.float32), None
+
+        y, _ = jax.lax.scan(body, x, None, length=n)
+        return y
+
+    hlo = jax.jit(f).lower(jnp.ones((d, d), jnp.float32)).compile().as_text()
+    wc = analyze_hlo(hlo)
+    one = 2 * d**3
+    assert wc.flops >= n * one * 0.99, (wc.flops, n * one)
+    assert wc.flops <= n * one * 1.5
+
+
+def test_roofline_terms_and_dominance():
+    rep = roofline(
+        flops=197e12, hbm_bytes=819e9 / 2, coll_bytes=0.0, chips=4,
+        model_flops=4 * 197e12 * 0.8,
+    )
+    assert abs(rep.compute_s - 1.0) < 1e-9
+    assert abs(rep.memory_s - 0.5) < 1e-9
+    assert rep.dominant == "compute"
+    assert abs(rep.useful_ratio - 0.8) < 1e-9

@@ -1,0 +1,120 @@
+"""Property tests (hypothesis) for blocking/sparsity invariants —
+over-decomposition load-balance is the paper's central quantitative claim."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocking as bk
+from repro.core import sparsity as sp
+
+
+@given(
+    extent=st.integers(8, 4096),
+    block=st.integers(1, 512),
+)
+def test_uniform_tiling_covers_extent(extent, block):
+    t = bk.uniform_tiling(extent, block)
+    assert t.extent == extent
+    assert all(s == block for s in t.sizes[:-1])
+    assert 0 < t.sizes[-1] <= block
+
+
+@given(
+    extent=st.integers(16, 8192),
+    num_blocks=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nonuniform_tiling_paper_procedure(extent, num_blocks, seed):
+    """§4.1: total rows preserved, every block nonempty, count preserved."""
+    num_blocks = min(num_blocks, extent)
+    t = bk.nonuniform_tiling(extent, num_blocks, seed=seed)
+    assert t.extent == extent
+    assert t.num_blocks == num_blocks
+    assert all(s >= 1 for s in t.sizes)
+
+
+@given(
+    extent=st.integers(16, 2048),
+    num_blocks=st.integers(1, 32),
+    tile=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_bucketize_invariants(extent, num_blocks, tile, seed):
+    num_blocks = min(num_blocks, extent)
+    t = bk.nonuniform_tiling(extent, num_blocks, seed=seed)
+    b = bk.bucketize(t, tile)
+    # all real elements appear exactly once, in order
+    idx = b.gather_indices()
+    valid = idx[idx >= 0]
+    assert len(valid) == extent
+    assert np.array_equal(np.sort(valid), np.arange(extent))
+    # waste bounded by (tile-1) per logical block
+    assert 0 <= b.padding_waste < 1
+    assert b.padded_extent - extent <= (tile - 1) * num_blocks
+    # per-tile valid counts match logical sizes
+    per_block = {}
+    for bid, v in zip(b.block_id, b.valid):
+        per_block[bid] = per_block.get(bid, 0) + v
+    assert per_block == {i: s for i, s in enumerate(t.sizes)}
+
+
+@given(seed=st.integers(0, 100))
+@settings(deadline=None)
+def test_overdecomposition_shrinks_imbalance(seed):
+    """The paper's §4.4 claim: cyclic embedding of many blocks per process
+    reduces effective imbalance far below block-level imbalance."""
+    n, blocks = 8192, 64
+    rt = bk.nonuniform_tiling(n, blocks, seed=seed)
+    ct = bk.nonuniform_tiling(n, blocks, seed=seed + 1)
+    block_stats = bk.load_stats(rt, ct)
+    proc_stats = bk.load_stats(rt, ct, grid=(4, 4))
+    assert proc_stats.memory_min_max <= block_stats.memory_min_max
+    assert proc_stats.work_min_max <= block_stats.work_min_max
+
+
+@given(
+    mb=st.integers(1, 24),
+    nb=st.integers(1, 24),
+    fill=st.floats(0.05, 1.0),
+    seed=st.integers(0, 1000),
+)
+def test_block_csr_roundtrip(mb, nb, fill, seed):
+    mask = sp.random_block_mask(mb, nb, fill, seed=seed)
+    csr = sp.block_csr_from_mask(mask)
+    assert np.array_equal(csr.to_dense(), mask)
+    assert csr.nnz == mask.sum()
+    padded = csr.padded_cols()
+    lengths = csr.row_lengths()
+    for i in range(mb):
+        row = padded[i]
+        assert np.all(row[: lengths[i]] >= 0)
+        assert np.all(row[lengths[i]:] == -1)
+
+
+@given(
+    mb=st.integers(1, 12),
+    kb=st.integers(1, 12),
+    nb=st.integers(1, 12),
+    fill=st.floats(0.1, 1.0),
+)
+def test_mask_flops_bounds(mb, kb, nb, fill):
+    a = sp.random_block_mask(mb, kb, fill, seed=1)
+    b = sp.random_block_mask(kb, nb, fill, seed=2)
+    sparse, dense = sp.mask_matmul_flops(a, b, 8, 8, 8)
+    assert 0 <= sparse <= dense
+    if fill == 1.0:
+        assert sparse == dense
+
+
+def test_paper_table1_regime():
+    """Table 1: block-level min:max for the paper's sizes lands in the
+    reported band (memory ~1:3-1:4, work ~1:4.5-1:7.2)."""
+    mems, works = [], []
+    for n in (32768, 65536):
+        rt = bk.nonuniform_tiling(n, n // 256, seed=n)
+        ct = bk.nonuniform_tiling(n, n // 256, seed=n + 7)
+        s = bk.load_stats(rt, ct)
+        mems.append(s.memory_min_max)
+        works.append(s.work_min_max)
+    assert all(1.5 < m < 8.0 for m in mems), mems
+    assert all(2.0 < w < 12.0 for w in works), works

@@ -1,0 +1,104 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparsity import block_csr_from_mask, random_block_mask
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 1e-4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,k,n", [(64, 64, 64), (128, 256, 64), (96, 160, 224), (100, 60, 36)]
+)
+def test_tiled_matmul(m, k, n, dtype):
+    a, b = _arr((m, k), dtype), _arr((k, n), dtype)
+    out = ops.tiled_matmul(a, b, bm=64, bk=64, bn=64)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=_tol(dtype), atol=_tol(dtype) * k ** 0.5,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("fill", [0.1, 0.4, 1.0])
+@pytest.mark.parametrize("mb,kb", [(4, 8), (2, 2), (8, 4)])
+def test_bsmm(fill, mb, kb, dtype):
+    m, k, n = mb * 32, kb * 32, 96
+    a, b = _arr((m, k), dtype), _arr((k, n), dtype)
+    mask = random_block_mask(mb, kb, fill, seed=int(fill * 10) + mb)
+    out = ops.bsmm(a, b, mask, bn=32)
+    want = ref.bsmm_ref(a, b, mask)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=_tol(dtype), atol=_tol(dtype) * k ** 0.5,
+    )
+
+
+def test_bsmm_empty_rows_give_zero():
+    mask = np.zeros((4, 4), dtype=bool)
+    mask[0, 0] = True  # only one live block
+    a, b = _arr((128, 128), jnp.float32), _arr((128, 64), jnp.float32)
+    out = np.asarray(ops.bsmm(a, b, mask, bn=32))
+    assert np.all(out[32:] == 0.0)
+    assert np.any(out[:32] != 0.0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,f,e,bt", [(256, 64, 96, 4, 64), (512, 128, 64, 8, 128)])
+def test_grouped_gemm(t, d, f, e, bt, dtype):
+    x = _arr((t, d), dtype)
+    w = _arr((e, d, f), dtype)
+    te = jnp.asarray(RNG.integers(0, e, size=t // bt), jnp.int32)
+    out = ops.grouped_gemm(x, w, te, bt=bt, bk=64, bn=32)
+    want = ref.grouped_gemm_ref(x, w, te, bt)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=_tol(dtype), atol=_tol(dtype) * d ** 0.5,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "h,hkv,s,causal,window",
+    [
+        (4, 2, 256, True, None),
+        (4, 1, 256, True, 64),
+        (2, 2, 128, False, None),
+        (8, 4, 512, True, 128),
+    ],
+)
+def test_flash_attention(h, hkv, s, causal, window, dtype):
+    b, dh = 2, 64
+    q = _arr((b, h, s, dh), dtype)
+    k = _arr((b, hkv, s, dh), dtype)
+    v = _arr((b, hkv, s, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, bq=128, bk=128)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 2e-3,
+        atol=2e-2 if dtype == jnp.bfloat16 else 2e-3,
+    )
+
+
+def test_flash_attention_fully_masked_rows():
+    """window smaller than block: early rows attend to <= window keys."""
+    b, h, s, dh = 1, 2, 256, 64
+    q, k, v = (_arr((b, h, s, dh), jnp.float32) for _ in range(3))
+    out = ops.flash_attention(q, k, v, causal=True, window=8, bq=128, bk=128)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-3, atol=2e-3)
