@@ -31,8 +31,8 @@ strategy = cfg_in["strategy"]
 nonuniform = cfg_in["nonuniform"]
 repeats = cfg_in["repeats"]
 
-mesh = jax.make_mesh((P[0], P[1]), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((P[0], P[1]), ("data", "model"))
 from repro.core import (DistributedMatmul, NonuniformMatmul, nonuniform_tiling,
                         uniform_tiling)
 from repro.analysis.hlo import analyze_hlo

@@ -317,7 +317,12 @@ def _dot_flops(line: str, result_shape: str, shapes: dict[str, str]) -> float:
     for d in res[0][1]:
         result_elems *= d
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-    om = re.search(r"dot\(%?([\w.\-]+),", line)
+    # First operand may be printed bare (``dot(%x,``) or with its type
+    # (``dot(f32[64,64]{1,0} %x,`` — older jax HLO text, whose layout
+    # braces contain commas): take the first %name after ``dot(``.
+    om = re.search(r"dot\([^%)]*%([\w.\-]+)", line)
+    if om is None:
+        om = re.search(r"dot\(([\w.\-]+),", line)
     contract = 1
     if cm and om:
         lhs_shape = shapes.get(om.group(1))

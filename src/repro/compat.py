@@ -1,0 +1,81 @@
+"""Version tolerance for the jax APIs this repo leans on.
+
+The codebase is written against the modern spellings (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``); this
+module maps them onto whatever the installed jax provides so the same
+source runs from jax 0.4.x (``jax.experimental.shard_map``, no axis
+types) up to current releases.  Import from here instead of feature-
+probing at call sites:
+
+    from repro.compat import shard_map
+
+No third-party dependencies are introduced — everything degrades to the
+older public API or to a no-op (axis types only affect GSPMD's
+auto/explicit mode split, which this repo does not rely on).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+__all__ = [
+    "shard_map",
+    "AxisType",
+    "HAS_AXIS_TYPE",
+    "mesh_axis_types_kwargs",
+    "pallas_tpu_compiler_params",
+]
+
+
+try:  # jax >= 0.5.3
+    from jax.sharding import AxisType
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+    HAS_AXIS_TYPE = False
+
+
+def mesh_axis_types_kwargs(n_axes: int) -> dict[str, Any]:
+    """kwargs for ``jax.make_mesh`` / ``Mesh``: all-Auto axis types when the
+    installed jax supports them, nothing otherwise."""
+    if HAS_AXIS_TYPE:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+    return {}
+
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+else:  # jax 0.4.x/0.5.x: experimental module, ``check_rep`` spelling
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )
+
+
+shard_map.__doc__ = """``jax.shard_map`` with a stable signature across jax versions.
+
+``check_vma`` maps to the old ``check_rep`` flag on jax < 0.6."""
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams(**kwargs)`` under its per-version name.
+
+    jax 0.4.x/0.5.x call it ``TPUCompilerParams``; newer releases renamed
+    it to ``CompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:  # pragma: no cover - depends on installed jax
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

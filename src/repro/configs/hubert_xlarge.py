@@ -3,7 +3,7 @@
 [arXiv:2106.07447] 48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504.
 Bidirectional attention, GELU FFN.  The conv feature extractor is a STUB:
 ``input_specs`` feeds precomputed frame embeddings (B, S, 1280).
-Encoder-only: no decode shapes (see DESIGN.md §Cell skips).
+Encoder-only: no decode shapes (see README.md §Cell skips).
 """
 from repro.models.config import ModelConfig
 

@@ -3,7 +3,8 @@
 [arXiv:2501.kimi2, paper-table] 61L d_model=7168 64H (GQA kv=8)
 expert d_ff=2048 vocab=163840; MoE 384e top-8 + 1 shared expert.
 Full attention -> long_500k skipped.  Optimizer: Adafactor (factored
-second moment) so 1T-param optimizer state fits 512 x 16 GB (DESIGN §5).
+second moment) so 1T-param optimizer state fits 512 x 16 GB
+(EXPERIMENTS.md §Memory budget).
 """
 from repro.models.config import ModelConfig, MoEConfig
 

@@ -1,4 +1,18 @@
-"""Architecture registry: ``--arch <id>`` resolution."""
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Each id maps to a module exporting ``CONFIG`` (the full, paper-faithful
+configuration) and ``SMOKE`` (a reduced variant that runs a CPU forward
++ train step in seconds).  ``get_config(arch, smoke=...)`` picks one.
+
+The ten architectures were chosen so that every scheduling/sharding
+scenario the system claims to handle is exercised by at least one
+config — dense vs MoE (expert parallelism), full vs sliding-window vs
+recurrent sequence mixing (KV-ring vs O(1) caches), tied vs untied
+embeddings, text vs audio vs vision-language frontends, and AdamW vs
+factored-Adafactor optimizer states.  README.md §Architectures has the
+full id -> scenario table; README.md §Cell skips documents which
+(arch, shape) dry-run cells are intentionally skipped and why.
+"""
 from __future__ import annotations
 
 import importlib
@@ -28,7 +42,7 @@ def get_config(arch: str, smoke: bool = False) -> ModelConfig:
     return mod.SMOKE if smoke else mod.CONFIG
 
 
-# (arch, shape) cells that are skipped, with reasons (DESIGN.md §Cell skips)
+# (arch, shape) cells that are skipped, with reasons (README.md §Cell skips)
 SKIPS: dict[tuple[str, str], str] = {
     ("llama3.2-1b", "long_500k"): "skip(full-attn)",
     ("gemma-2b", "long_500k"): "skip(full-attn)",

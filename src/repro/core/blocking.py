@@ -185,7 +185,7 @@ class BucketedTiling:
     ``valid`` records how many elements of each physical tile are real.
 
     This is the documented hardware adaptation of the paper's
-    arbitrary-block-size support (DESIGN.md §2).
+    arbitrary-block-size support (README.md §Paper-to-code map).
     """
 
     logical: Tiling

@@ -54,6 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 __all__ = [
     "SummaConfig",
     "multi_issue_limit",
@@ -352,7 +354,7 @@ def summa_matmul(
         return c.astype(out_dtype)
 
     spec2 = P(cfg.row_axis, cfg.col_axis)
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=cfg.mesh,
         in_specs=(spec2, spec2),
@@ -406,7 +408,7 @@ def summa_25d_matmul(
         return c_acc.astype(out_dtype)
 
     spec2 = P(cfg.row_axis, cfg.col_axis)  # no rep_axis: replicated operands
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=cfg.mesh,
         in_specs=(spec2, spec2),
@@ -489,7 +491,7 @@ def summa_blocksparse_matmul(
         return c.astype(out_dtype)
 
     spec2 = P(cfg.row_axis, cfg.col_axis)
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=cfg.mesh,
         in_specs=(spec2, spec2),

@@ -1,0 +1,20 @@
+"""Distributed-parallelism layer: mesh context, partitioning, collectives.
+
+This package is the seam between the mesh-agnostic model code
+(``repro.models``) and the hardware: ``context.ParallelCtx`` carries the
+mesh and the parallelism policy, ``partitioning`` infers FSDP +
+tensor-parallel ``PartitionSpec``s over parameter pytrees, and
+``collective_matmul`` routes the LM stack's projections through the
+paper's task-based SUMMA engine (``repro.core``) when asked to.
+"""
+from repro.dist.context import ParallelCtx
+from repro.dist.partitioning import param_shardings, param_specs
+from repro.dist.collective_matmul import allgather_matmul, project
+
+__all__ = [
+    "ParallelCtx",
+    "param_specs",
+    "param_shardings",
+    "project",
+    "allgather_matmul",
+]

@@ -1,0 +1,143 @@
+"""ParallelCtx: the one object that carries parallelism policy.
+
+Every model / train / serve entry point takes a ``ParallelCtx``.  It
+bundles the device mesh with the axis roles (which mesh axes act as data
+parallel, which as tensor parallel) and the feature switches that the
+dry-run driver sweeps (matmul strategy, attention implementation, ZeRO-1,
+KV-cache quantization, ...).  Model code never touches the mesh directly;
+it goes through ``ctx.wsc`` (sharding constraints), ``ctx.named``
+(NamedSharding construction) and ``repro.dist.collective_matmul.project``
+(matmuls), which all degrade to no-ops / plain einsums on ``mesh=None``
+so the same code runs single-device smoke tests unchanged.
+
+``matmul()`` is the factory that wires the paper's engine into the LM
+stack: with ``matmul_strategy="summa"`` it builds a
+``core.api.DistributedMatmul`` over the (dp x tp) mesh slice running the
+task-based multiple-issue schedule (core.summa), and the FFN projections
+route through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ParallelCtx"]
+
+#: matmul_strategy -> core.summa strategy actually executed
+_MATMUL_STRATEGIES = {
+    "xla": None,  # plain jnp.einsum, XLA chooses the collectives
+    "summa": "taskbased",  # paper Eq. (1) multiple-issue SUMMA
+    "allgather": "allgather",  # I = K endpoint of Eq. (1)
+}
+
+
+@dataclasses.dataclass
+class ParallelCtx:
+    """Mesh + axis roles + parallelism feature switches.
+
+    ``dp_axes`` may name several mesh axes (e.g. ``("pod", "data")`` on
+    the two-pod production mesh); they act as one flattened data-parallel
+    axis.  ``pure_dp=True`` folds the tensor-parallel axis into data
+    parallelism: ``tp_axis`` becomes ``None`` and every weight is fully
+    replicated along the former TP axis.
+    """
+
+    mesh: Mesh | None
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str | None = "model"
+    matmul_strategy: str = "xla"  # "xla" | "summa" | "allgather"
+    attention_impl: str = "ref"  # "ref" | "chunked"
+    mlstm_chunk: int | None = None
+    zero1: bool = False
+    kv_quant: bool = False
+    slstm_replicated: bool = False
+    pure_dp: bool = False
+
+    def __post_init__(self):
+        if isinstance(self.dp_axes, str):
+            self.dp_axes = (self.dp_axes,)
+        else:
+            self.dp_axes = tuple(self.dp_axes)
+        if self.matmul_strategy not in _MATMUL_STRATEGIES:
+            raise ValueError(
+                f"matmul_strategy={self.matmul_strategy!r}; "
+                f"known: {sorted(_MATMUL_STRATEGIES)}"
+            )
+        # With pure DP there is no tensor-parallel axis: remember the raw
+        # name for SUMMA grid construction but expose tp_axis=None so no
+        # sharding rule places anything on it.
+        self._tp_axis_raw = self.tp_axis
+        if self.pure_dp:
+            self.tp_axis = None
+        self._mm_cache = None
+
+    # -- mesh geometry -------------------------------------------------------
+
+    @property
+    def has_mesh(self) -> bool:
+        return self.mesh is not None and not self.mesh.empty
+
+    @property
+    def dp(self):
+        """The data-parallel PartitionSpec entry (name or tuple of names)."""
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def dp_size(self) -> int:
+        if not self.has_mesh:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in self.dp_axes)
+
+    @property
+    def tp_size(self) -> int:
+        if not self.has_mesh or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    # -- sharding helpers ----------------------------------------------------
+
+    def named(self, *entries) -> NamedSharding:
+        """``NamedSharding(mesh, P(*entries))``; requires a mesh."""
+        if self.mesh is None:
+            raise ValueError("ParallelCtx.named() needs a mesh")
+        return NamedSharding(self.mesh, P(*entries))
+
+    def wsc(self, x: jax.Array, *entries) -> jax.Array:
+        """with_sharding_constraint under ``P(*entries)``; identity when
+        meshless so model code stays single-device clean."""
+        if not self.has_mesh:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(*entries))
+
+    # -- the paper's engine --------------------------------------------------
+
+    def matmul(self) -> Any:
+        """Factory: the ``core.api.DistributedMatmul`` realising this ctx's
+        matmul strategy on the (dp x tp) mesh slice.
+
+        Cached — SUMMA configuration is static per context, so every FFN
+        projection in a scanned stack shares one engine (and therefore
+        one shard_map program) per context.
+        """
+        if self._mm_cache is not None:
+            return self._mm_cache
+        if not self.has_mesh:
+            raise ValueError("matmul_strategy needs a mesh; got mesh=None")
+        strategy = _MATMUL_STRATEGIES[self.matmul_strategy]
+        if strategy is None:
+            raise ValueError("matmul() is not used for the 'xla' strategy")
+        if self._tp_axis_raw is None:
+            raise ValueError("SUMMA needs a tensor-parallel mesh axis")
+        from repro.core.api import DistributedMatmul  # deferred: no cycle
+
+        self._mm_cache = DistributedMatmul(
+            mesh=self.mesh,
+            row_axis=self.dp,
+            col_axis=self._tp_axis_raw,
+            strategy=strategy,
+        )
+        return self._mm_cache

@@ -1,0 +1,166 @@
+"""Path-based FSDP + tensor-parallel PartitionSpec inference.
+
+Model parameters are plain nested dicts (models/layers.py), so sharding
+is attached *by path*, never by module type:
+
+* dense kernels ``{"w": (..., d_in, d_out)}`` — ``(..., "data",
+  "model")``: input dim FSDP-sharded, output dim tensor-parallel.  Any
+  leading dims (the scan-stacked unit axis) stay replicated.
+* MoE expert weights (raw ``(..., E, d_in, d_out)`` arrays under
+  ``w_gate`` / ``w_up`` / ``w_down``) — experts over the TP axis (expert
+  parallelism, models/moe.py) and ``d_model`` over the FSDP axis.
+* embeddings ``(V, D)`` — ``("model", "data")``: vocab over TP (the
+  all-reduce after the tied unembed is the same collective as a TP
+  head), ``D`` over FSDP.
+* biases — output dim over TP; norms / conv / gate vectors replicated.
+
+``param_specs`` proposes specs from these rules; ``_validate_spec``
+makes them safe for a concrete mesh (a dim that does not divide its
+axis-group size falls back to replicated — nonuniform shapes like
+vocab 50304 on a 16-way axis must not crash a launch); ``param_shardings``
+composes both into NamedShardings, with ``fsdp=False`` (ZeRO-1 params)
+and ``tp=False`` (pure data parallelism) dropping the respective axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "param_shardings", "_validate_spec"]
+
+_FSDP_AXIS = "data"
+_TP_AXIS = "model"
+
+#: raw-array expert weights in models/moe.py (dense layers wrap their
+#: kernel in a {"w": ...} dict, so they never hit these keys directly)
+_EXPERT_UP_KEYS = ("w_gate", "w_up")  # (..., E, d_model, d_ff)
+_EXPERT_DOWN_KEYS = ("w_down",)  # (..., E, d_ff, d_model)
+
+
+def _path_keys(path) -> list[Any]:
+    out = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            out.append(entry.key)
+        elif hasattr(entry, "idx"):
+            out.append(entry.idx)
+        else:  # pragma: no cover - future jax key types
+            out.append(str(entry))
+    return out
+
+
+def _leaf_spec(path, leaf) -> P:
+    keys = _path_keys(path)
+    last = keys[-1] if keys else None
+    nd = getattr(leaf, "ndim", len(leaf.shape))
+    lead = [None] * max(nd - 2, 0)
+
+    if last == "embedding" and nd == 2:
+        return P(_TP_AXIS, _FSDP_AXIS)
+    if last == "w" and nd >= 2:
+        return P(*lead, _FSDP_AXIS, _TP_AXIS)
+    if last == "b" and nd >= 1:
+        return P(*([None] * (nd - 1)), _TP_AXIS)
+    if last in _EXPERT_UP_KEYS and nd >= 3:
+        return P(*([None] * (nd - 3)), _TP_AXIS, _FSDP_AXIS, None)
+    if last in _EXPERT_DOWN_KEYS and nd >= 3:
+        return P(*([None] * (nd - 3)), _TP_AXIS, None, _FSDP_AXIS)
+    # norms, convs, recurrence gates, router (fp32, small): replicated
+    return P(*([None] * nd))
+
+
+def param_specs(params) -> Any:
+    """PartitionSpec tree mirroring ``params`` (one P per leaf)."""
+    return jax.tree_util.tree_map_with_path(_leaf_spec, params)
+
+
+def _filter_spec(spec: P, *, fsdp: bool, tp: bool) -> P:
+    """Drop the FSDP and/or TP axis from a spec (ZeRO-1 / pure-DP)."""
+
+    def keep(axis):
+        if axis == _FSDP_AXIS and not fsdp:
+            return False
+        if axis == _TP_AXIS and not tp:
+            return False
+        return True
+
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if keep(a))
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(kept)
+    return P(*out)
+
+
+def _validate_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Make ``spec`` safe for ``shape`` on ``mesh``.
+
+    * a spec longer than the array rank (an over-sharded tree) is a bug in
+      the rules — raise;
+    * an axis name the mesh does not know is a bug in the caller — raise;
+    * a dim that does not divide its axis-group size silently falls back
+      to replicated for that dim (nonuniform vocab / head counts must
+      degrade, not crash).
+
+    ``mesh`` only needs a ``.shape`` mapping (axis name -> size), so
+    abstract stand-ins work for spec checks without devices.
+    """
+    entries = tuple(spec)
+    if len(entries) > len(shape):
+        raise ValueError(
+            f"spec {spec} has {len(entries)} entries for rank-{len(shape)} "
+            f"array of shape {shape} (over-sharded)"
+        )
+    mesh_shape = dict(mesh.shape)
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            if a not in mesh_shape:
+                raise ValueError(
+                    f"spec {spec} references unknown mesh axis {a!r}; "
+                    f"mesh has {sorted(mesh_shape)}"
+                )
+        group = math.prod(mesh_shape[a] for a in axes)
+        out.append(entry if dim % group == 0 else None)
+    # dims beyond the spec's length are implicitly replicated
+    return P(*out)
+
+
+def param_shardings(
+    params,
+    mesh: Mesh,
+    *,
+    fsdp: bool = True,
+    tp: bool = True,
+) -> Any:
+    """NamedSharding tree for ``params`` on ``mesh``.
+
+    ``fsdp=False`` replicates over the FSDP axis (ZeRO-1 parameter
+    mirrors); ``tp=False`` replicates over the TP axis (pure data
+    parallelism).  Indivisible dims degrade to replicated per
+    ``_validate_spec``.
+    """
+    specs = param_specs(params)
+
+    def to_sharding(leaf, spec):
+        spec = _filter_spec(spec, fsdp=fsdp, tp=tp)
+        spec = _validate_spec(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(to_sharding, params, specs)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
+
 __all__ = ["grouped_gemm_kernel", "grouped_gemm_pallas"]
 
 
@@ -79,7 +81,7 @@ def grouped_gemm_pallas(
         functools.partial(grouped_gemm_kernel, k_tiles=k_tiles),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, f), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -33,6 +33,8 @@ from repro.models.config import ModelConfig, MoEConfig
 
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def padded_experts(moe: MoEConfig, ep: int) -> int:
     return -(-moe.num_experts // ep) * ep
@@ -176,7 +178,7 @@ def moe_ffn(
         )
         bspec = ctx.dp if b % max(ctx.dp_size, 1) == 0 else None
         act = P(bspec, None, None)
-        y = jax.shard_map(
+        y = shard_map(
             body,
             mesh=ctx.mesh,
             in_specs=(

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.dist.context import ParallelCtx
 from repro.models import layers as L
 from repro.models.attention import _project_qkv, attention
@@ -344,7 +346,7 @@ def _decode_attention(q, k_new, v_new, k_cache, v_cache, slot, n_valid,
         in_specs += [cache_spec, cache_spec, new_spec, new_spec]
         out_specs += [cache_spec, cache_spec]
         args += [k_scale, v_scale, ks_new, vs_new]
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=tuple(in_specs),

@@ -4,7 +4,7 @@ Pure-pytree implementations (no optax dependency).  AdamW keeps an fp32
 master copy so bf16 params don't lose small updates.  Adafactor stores
 row/column-factored second moments and no master/first moment — the
 memory-frugal choice that lets the 1T-param kimi-k2 optimizer state fit
-512 x 16 GB (DESIGN.md §5).
+512 x 16 GB (EXPERIMENTS.md §Memory budget).
 
 Both include global-norm clipping and a linear-warmup + cosine schedule.
 """

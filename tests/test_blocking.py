@@ -1,7 +1,12 @@
 """Property tests (hypothesis) for blocking/sparsity invariants —
-over-decomposition load-balance is the paper's central quantitative claim."""
+over-decomposition load-balance is the paper's central quantitative claim.
+
+hypothesis is a dev extra (pyproject ``[dev]``); without it this module
+skips instead of breaking tier-1 collection."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import blocking as bk

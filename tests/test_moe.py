@@ -108,8 +108,8 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.configs import get_config
 from repro.dist.context import ParallelCtx
 from repro.models.moe import init_moe, moe_ffn
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 ctx = ParallelCtx(mesh=mesh)
 ctx1 = ParallelCtx(mesh=None)
 cfg = get_config("mixtral-8x7b", smoke=True)

@@ -121,8 +121,8 @@ from repro.configs import get_config
 from repro.dist.context import ParallelCtx
 from repro.train.optimizer import OptimizerConfig, make_optimizer
 from repro.train import train_step as ts
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = get_config("llama3.2-1b", smoke=True)
 opt = make_optimizer(OptimizerConfig(total_steps=10, warmup_steps=1))
 rng = jax.random.PRNGKey(0)

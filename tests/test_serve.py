@@ -90,8 +90,8 @@ SHARDED_DECODE_CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.serve.engine import _decode_attention
 from repro.dist.context import ParallelCtx
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 ctx = ParallelCtx(mesh=mesh)
 ctx1 = ParallelCtx(mesh=None)
 rng = np.random.default_rng(0)

@@ -41,8 +41,8 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.core import (DistributedMatmul, NonuniformMatmul, reference_matmul,
                         reference_blocksparse_matmul, random_block_mask,
                         nonuniform_tiling)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 M, K, N = 64, 128, 96
 a = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
@@ -71,8 +71,7 @@ nmm = NonuniformMatmul(DistributedMatmul(mesh, strategy="taskbased"), rt, it, ct
 assert np.abs(np.asarray(nmm(a2, b2)) - np.asarray(reference_matmul(a2, b2))).max() < 1e-3
 # multi-pod style 3-axis mesh with tuple row axis
 from repro.core.summa import SummaConfig, summa_matmul, summa_25d_matmul
-mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg3 = SummaConfig(mesh=mesh3, row_axis=("pod", "data"), col_axis="model",
                    strategy="taskbased", k_blocks=4)
 out3 = np.asarray(summa_matmul(a, b, cfg3))
@@ -96,8 +95,8 @@ BLOCKSPARSE_COMM_CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import DistributedMatmul, random_block_mask
 from repro.core.summa import SummaConfig, summa_blocksparse_matmul, summa_matmul
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 cfg = SummaConfig(mesh=mesh, strategy="taskbased", k_blocks=8)
 a = jnp.ones((64, 128), jnp.float32)
 b = jnp.ones((128, 64), jnp.float32)

@@ -121,10 +121,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train import checkpoint as ck
 import tempfile, os
 tmp = tempfile.mkdtemp()
-mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
-mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh_a = make_mesh((4, 2), ("data", "model"))
+mesh_b = make_mesh((2, 4), ("data", "model"))
 x = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
 xa = jax.device_put(x, NamedSharding(mesh_a, P("data", "model")))
 ck.save_checkpoint(tmp, 1, {"w": xa})
