@@ -1,5 +1,11 @@
 """Benchmark harness — one section per paper table/figure.
 
+Also writes ``BENCH_summa.json`` (``--json`` to relocate): a
+machine-readable record of the planned-sparse sweep — GF/s, modeled
+per-device collective bytes from the ``MatmulPlan`` cost model, fill-in,
+strategy, and the dense-vs-planned-sparse speedup at fills 0.1/0.3/1.0 —
+so the perf trajectory is tracked across PRs.
+
 Prints ``name,us_per_call,derived`` CSV rows:
 
 * table1_*   — paper Table 1: min:max memory/work ratios of nonuniformly
@@ -22,7 +28,6 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
 from __future__ import annotations
 
 import argparse
-import sys
 
 import numpy as np
 
@@ -179,12 +184,100 @@ def bench_blocksparse():
         )
 
 
+def bench_planned_sparse(json_path: str) -> None:
+    """Dense vs *planned* sparse at fills 0.1/0.3/1.0 -> BENCH_summa.json.
+
+    One ``MatmulPlan`` per fill supplies the modeled per-device collective
+    bytes, the fill-in, and the per-device pruning stats; the measured
+    wall clock gives GF/s and the dense-vs-sparse speedup.  The JSON is
+    the cross-PR perf trajectory record.
+    """
+    import json
+    import time as _t
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import DistributedMatmul
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 1)
+    # Wide panels (K/4) keep per-panel GEMMs MXU/BLAS-efficient on this
+    # single-core container; finer grids fragment the local dots and the
+    # wall clock measures overhead instead of pruning.
+    n, kb = 1024, 4
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    # Same K granularity for dense and sparse so the comparison isolates
+    # the planner's pruning, not the panel count.
+    mm = DistributedMatmul(mesh, strategy="taskbased", k_blocks=kb)
+
+    def screened_mask(fill, seed):
+        """Screening-style mask: dead rows/columns allowed (unlike
+        ``random_block_mask``, which guarantees full coverage), so global
+        panel pruning actually fires at low fill."""
+        r = np.random.default_rng(seed)
+        return r.random((kb, kb)) < fill
+
+    def timed(fn):
+        out = fn(a, b)
+        out.block_until_ready()
+        t0 = _t.perf_counter()
+        for _ in range(3):
+            out = fn(a, b)
+        out.block_until_ready()
+        return (_t.perf_counter() - t0) / 3
+
+    dense_wall = timed(jax.jit(lambda a, b: mm(a, b)))
+    dense_plan = mm.plan(n, n, n)
+    entries = [
+        {
+            "name": "dense_N1024",
+            "wall_s": dense_wall,
+            "gflops_per_s": 2.0 * n**3 / dense_wall / 1e9,
+            "speedup_vs_dense": 1.0,
+            "plan": dense_plan.summary(),
+        }
+    ]
+    _row("plan_dense_N1024", dense_wall * 1e6, "speedup=1.00")
+    for fill in (0.1, 0.3, 1.0):
+        am = screened_mask(fill, seed=1)
+        bm = screened_mask(fill, seed=2)
+        plan = mm.plan(n, n, n, a_mask=am, b_mask=bm)
+        wall = timed(
+            jax.jit(lambda a, b, am=am, bm=bm: mm(a, b, a_mask=am, b_mask=bm))
+        )
+        useful = plan.cost.flops_sparse
+        entries.append(
+            {
+                "name": f"planned_sparse_fill{fill}_N{n}",
+                "wall_s": wall,
+                "gflops_per_s": useful / wall / 1e9,
+                "speedup_vs_dense": dense_wall / wall,
+                "plan": plan.summary(),
+            }
+        )
+        _row(
+            f"plan_sparse_fill{fill}_N{n}",
+            wall * 1e6,
+            f"speedup={dense_wall / wall:.2f};fill={plan.cost.fill_in:.3f};"
+            f"comm_B={plan.cost.comm_bytes['taskbased']:.3g}",
+        )
+    with open(json_path, "w") as f:
+        json.dump({"bench": "summa", "entries": entries}, f, indent=2)
+    print(f"# wrote {json_path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_summa.json")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     bench_table1()
+    bench_planned_sparse(args.json)
     bench_blocksparse()
     bench_strategies()
     bench_weak_scaling(args.quick)

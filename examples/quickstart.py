@@ -13,7 +13,6 @@ sys.path.insert(0, "src")
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -20,7 +20,6 @@ Roofline terms (TPU v5e-like): 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Any
 

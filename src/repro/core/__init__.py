@@ -1,5 +1,6 @@
 """Core: task-based SUMMA for block-sparse tensor computing (the paper)."""
 from repro.core.api import DistributedMatmul, NonuniformMatmul, pad_to_multiple
+from repro.core.plan import MatmulPlan, PlanCost, plan_matmul
 from repro.core.blocking import (
     BucketedTiling,
     LoadStats,
@@ -21,6 +22,7 @@ from repro.core.sparsity import (
 )
 from repro.core.summa import (
     SummaConfig,
+    execute_plan,
     multi_issue_limit,
     reference_blocksparse_matmul,
     reference_matmul,

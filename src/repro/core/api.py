@@ -1,14 +1,17 @@
 """User-facing API for distributed (block-sparse) matrix multiplication.
 
-``DistributedMatmul`` wraps ``core.summa`` with the ergonomics a framework
-needs: automatic padding to grid multiples, nonuniform-blocking support
-via bucketization (core.blocking), mask plumbing, and jit-compiled call
-paths.  This is the object the LM stack and the examples use.
+``DistributedMatmul`` is a thin front-end over the ``core.plan`` planner:
+every call — dense, block-sparse, one-sided mask, nonuniform — resolves
+to one cached ``MatmulPlan`` (keyed by shapes + mask content + strategy)
+that ``core.summa.execute_plan`` interprets.  The front-end only pads
+operands to the plan's physical shapes and crops the result.
+``NonuniformMatmul`` adds the bucketized expand/compact adaptation for
+nonuniformly blocked matrices.  This is the object the LM stack and the
+examples use.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -18,6 +21,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import blocking as bk
 from repro.core import summa as sm
+from repro.core.plan import MatmulPlan, mask_key, plan_matmul
 
 __all__ = ["DistributedMatmul", "pad_to_multiple", "NonuniformMatmul"]
 
@@ -33,6 +37,13 @@ def pad_to_multiple(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
     return jnp.pad(x, pads)
 
 
+def _pad_to_shape(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    pads = [(0, t - d) for d, t in zip(x.shape, shape)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
 @dataclasses.dataclass
 class DistributedMatmul:
     """C = A @ B on a 2-D mesh slice, task-based SUMMA under the hood.
@@ -43,6 +54,11 @@ class DistributedMatmul:
         mm = DistributedMatmul(mesh, strategy="taskbased", k_blocks=8)
         c = mm(a, b)                       # dense
         c = mm(a, b, a_mask=am, b_mask=bm) # block-sparse
+        c = mm(a, b, b_mask=bm)            # one-sided block structure
+
+    Each distinct (shapes, masks, strategy) builds its ``MatmulPlan``
+    once; repeated (re)traces — scanned layers, prefill vs decode shapes
+    — hit the cache instead of re-deriving the schedule.
     """
 
     mesh: Mesh
@@ -53,13 +69,16 @@ class DistributedMatmul:
     lookahead: int | None = None
     accum_dtype: Any = jnp.float32
     local_matmul: str = "xla"
+    _plan_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
 
-    def config(self) -> sm.SummaConfig:
+    def config(self, strategy: str | None = None) -> sm.SummaConfig:
         return sm.SummaConfig(
             mesh=self.mesh,
             row_axis=self.row_axis,
             col_axis=self.col_axis,
-            strategy=self.strategy,  # type: ignore[arg-type]
+            strategy=strategy or self.strategy,  # type: ignore[arg-type]
             k_blocks=self.k_blocks,
             lookahead=self.lookahead,
             accum_dtype=self.accum_dtype,
@@ -78,6 +97,33 @@ class DistributedMatmul:
         sa, sb, _ = self.operand_shardings()
         return jax.device_put(a, sa), jax.device_put(b, sb)
 
+    # -- planning ------------------------------------------------------------
+
+    def plan(
+        self,
+        m: int,
+        k: int,
+        n: int,
+        *,
+        a_mask: np.ndarray | None = None,
+        b_mask: np.ndarray | None = None,
+        strategy: str | None = None,
+        itemsize: int = 4,
+    ) -> MatmulPlan:
+        """The (cached) execution plan for a (M, K) x (K, N) product."""
+        key = (
+            m, k, n, mask_key(a_mask), mask_key(b_mask),
+            strategy or self.strategy, itemsize,
+        )
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            plan = plan_matmul(
+                m, k, n, self.config(strategy),
+                a_mask=a_mask, b_mask=b_mask, itemsize=itemsize,
+            )
+            self._plan_cache[key] = plan
+        return plan
+
     # -- call paths ----------------------------------------------------------
 
     def __call__(
@@ -87,43 +133,21 @@ class DistributedMatmul:
         *,
         a_mask: np.ndarray | None = None,
         b_mask: np.ndarray | None = None,
+        strategy: str | None = None,
     ) -> jax.Array:
-        cfg = self.config()
         m, k = a.shape
-        _, n = b.shape
-        kmult = int(np.lcm(cfg.p_row, cfg.p_col))
-        if cfg.k_blocks:
-            kmult = int(np.lcm(kmult, cfg.k_blocks))
-        a_p = pad_to_multiple(a, (cfg.p_row, kmult))
-        b_p = pad_to_multiple(b, (kmult, cfg.p_col))
-        if a_mask is None and b_mask is None:
-            c_p = sm.summa_matmul(a_p, b_p, cfg)
-        else:
-            if a_mask is None or b_mask is None:
-                raise ValueError("provide both masks or neither")
-            # pad masks to match padded shapes (pad blocks are all-zero)
-            a_mask = _pad_mask(a_mask, a.shape, a_p.shape)
-            b_mask = _pad_mask(b_mask, b.shape, b_p.shape)
-            c_p = sm.summa_blocksparse_matmul(a_p, b_p, a_mask, b_mask, cfg)
-        return c_p[:m, :n]
-
-
-def _pad_mask(mask, orig_shape, padded_shape):
-    """Extend a block mask to a padded array; padded blocks are zero."""
-    mask = np.asarray(mask, dtype=bool)
-    rb, cb = mask.shape
-    br, bc = orig_shape[0] // rb, orig_shape[1] // cb
-    if orig_shape[0] % rb or orig_shape[1] % cb:
-        raise ValueError("mask must evenly block the original array")
-    # padded array must stay block-divisible with the same block sizes
-    if padded_shape[0] % br or padded_shape[1] % bc:
-        raise ValueError(
-            f"padded shape {padded_shape} not divisible by block ({br},{bc});"
-            " choose k_blocks so padding preserves blocking"
+        k2, n = b.shape
+        if k != k2:
+            raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
+        plan = self.plan(
+            m, k, n, a_mask=a_mask, b_mask=b_mask, strategy=strategy,
+            itemsize=a.dtype.itemsize,
         )
-    new = np.zeros((padded_shape[0] // br, padded_shape[1] // bc), dtype=bool)
-    new[:rb, :cb] = mask
-    return new
+        (mp, kp), (_, np_) = plan.padded_shapes
+        a_p = _pad_to_shape(a, (mp, kp))
+        b_p = _pad_to_shape(b, (kp, np_))
+        c_p = sm.execute_plan(a_p, b_p, plan)
+        return c_p[:m, :n]
 
 
 @dataclasses.dataclass
@@ -132,9 +156,10 @@ class NonuniformMatmul:
 
     Logical nonuniform tilings are bucketed into uniform physical tiles
     (core.blocking.bucketize); operands are gathered into the padded
-    physical layout (zeros in the pad), multiplied with the uniform-tile
-    SUMMA engine, and the result is scattered back to the compact layout.
-    Zero padding is exact: pad rows/cols contribute nothing.
+    physical layout (zeros in the pad), multiplied through the shared
+    ``MatmulPlan`` engine, and the result is scattered back to the
+    compact layout.  Zero padding is exact: pad rows/cols contribute
+    nothing.
 
     This is the TPU-native realisation of the paper's arbitrary-block-size
     support; ``padding_waste`` quantifies the cost of the adaptation.
@@ -158,6 +183,15 @@ class NonuniformMatmul:
             "inner": self.inner_b.padding_waste,
             "cols": self.col_b.padding_waste,
         }
+
+    def plan(self, *, itemsize: int = 4) -> MatmulPlan:
+        """The underlying uniform-tile plan for the bucketized product."""
+        return self.mm.plan(
+            self.row_b.padded_extent,
+            self.inner_b.padded_extent,
+            self.col_b.padded_extent,
+            itemsize=itemsize,
+        )
 
     def _expand(self, x: jax.Array, bdim: bk.BucketedTiling, axis: int):
         idx = jnp.asarray(bdim.gather_indices())

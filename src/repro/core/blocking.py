@@ -12,7 +12,6 @@ Also implements the paper's §4.1 nonuniform block generation procedure and
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 

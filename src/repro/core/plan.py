@@ -1,0 +1,441 @@
+"""MatmulPlan: one sparsity-aware execution plan for every matmul path.
+
+The paper's central claim is that a single task formulation absorbs
+dense, block-sparse, and nonuniformly blocked matrices without separate
+algorithms.  ``MatmulPlan`` is that formulation made static: given
+operand shapes, optional block masks, and a ``SummaConfig`` it
+precomputes — once, in numpy, outside any trace —
+
+* padded, grid- and block-aligned physical shapes;
+* the K-panel schedule (panel width, owners, over-decomposition);
+* **global panel liveness** (panels dead for every device: neither their
+  broadcast nor their rank-k update is emitted — today's trace-time
+  pruning) and **per-device panel liveness** (panels dead *for that grid
+  row/column*, strictly finer on structured masks);
+* per-device ``BlockCSR`` column maps feeding the Pallas scalar-prefetch
+  BSMM kernel, so surviving panels still skip dead blocks locally;
+* a cost model (modeled per-device collective bytes for every strategy,
+  dense/sparse FLOPs, fill-in) that upper layers use to pick a strategy.
+
+``core.summa.execute_plan`` interprets a plan inside ``shard_map``;
+``core.api.DistributedMatmul`` / ``NonuniformMatmul`` are thin
+front-ends that build (and cache) plans; ``dist.collective_matmul``
+consults the cost model for strategy auto-selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+
+import numpy as np
+
+from repro.core.sparsity import mask_matmul_flops
+from repro.core.summa import SummaConfig
+
+__all__ = ["MatmulPlan", "PlanCost", "plan_matmul", "mask_key"]
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def mask_key(mask: np.ndarray | None) -> tuple | None:
+    """Stable, cheap cache key for a block mask (shape + content digest)."""
+    if mask is None:
+        return None
+    mask = np.asarray(mask, dtype=bool)
+    return (mask.shape, hashlib.sha1(mask.tobytes()).hexdigest())
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PlanCost:
+    """Static cost estimates attached to a plan (modeled, per device)."""
+
+    flops_dense: float  # global useful FLOPs of the dense product
+    flops_sparse: float  # global FLOPs given the masks (== dense if none)
+    comm_bytes: dict  # strategy -> modeled per-device collective bytes
+    fill_in: float  # flops_sparse / flops_dense
+
+    def best_strategy(self, candidates: tuple[str, ...]) -> str:
+        known = [c for c in candidates if c in self.comm_bytes]
+        if not known:
+            raise ValueError(f"no known strategy among {candidates}")
+        return min(known, key=lambda c: self.comm_bytes[c])
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MatmulPlan:
+    """The full static schedule of one distributed (block-sparse) matmul.
+
+    All index math is resolved here; the executors in ``core.summa`` only
+    interpret it.  ``local_impl`` selects the local rank-k realisation:
+
+    * ``"dense"``  — no masks; strategy pipelines run dense panel dots.
+    * ``"masked"`` — masks present; globally-live panels unroll into a
+      static task DAG with masked operands (the pre-plan behaviour, and
+      the fallback when the BSMM alignment conditions fail).
+    * ``"bsmm"``   — masks present and ``local_matmul="pallas"``: live
+      panels are gathered once, then the Pallas scalar-prefetch kernel
+      consumes this device's CSR column map — local FLOPs scale with the
+      *per-device* fill-in, not the global one.
+    """
+
+    cfg: SummaConfig
+    m: int
+    k: int
+    n: int
+    m_pad: int
+    k_pad: int
+    n_pad: int
+    k_steps: int
+    kb_width: int
+    live_panels: tuple[int, ...]
+    a_mask: np.ndarray | None  # padded (M_blk, K_blk) block mask
+    b_mask: np.ndarray | None  # padded (K_blk, N_blk) block mask
+    device_live: np.ndarray | None  # (p_row, p_col, k_steps) bool
+    local_cols: np.ndarray | None  # (p_row, p_col, mb_loc, S) int32, -1 pad
+    local_block: tuple[int, int, int] | None  # (bm, bk, bn) for the kernel
+    local_impl: str  # "dense" | "masked" | "bsmm"
+    cost: PlanCost
+    itemsize: int
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def p_row(self) -> int:
+        return self.cfg.p_row
+
+    @property
+    def p_col(self) -> int:
+        return self.cfg.p_col
+
+    @property
+    def padded_shapes(self) -> tuple[tuple[int, int], tuple[int, int]]:
+        return (self.m_pad, self.k_pad), (self.k_pad, self.n_pad)
+
+    # -- pruning accounting --------------------------------------------------
+
+    @property
+    def skipped_panels_global(self) -> int:
+        """Panels pruned for the whole mesh (no broadcast emitted)."""
+        return self.k_steps - len(self.live_panels)
+
+    def skipped_panels_per_device(self) -> np.ndarray:
+        """(p_row, p_col) int — panels dead for each device's C tile.
+
+        Always >= ``skipped_panels_global`` elementwise; strictly greater
+        wherever the mask structure is non-global (e.g. banded masks on a
+        multi-row grid) — the finer pruning the planner feeds the local
+        BSMM kernel.
+        """
+        if self.device_live is None:
+            return np.zeros((self.p_row, self.p_col), dtype=np.int64)
+        return self.k_steps - self.device_live.sum(axis=2)
+
+    def summary(self) -> dict:
+        """JSON-able digest for benchmarks / logging."""
+        skipped = self.skipped_panels_per_device()
+        return {
+            "shape": [self.m, self.k, self.n],
+            "padded_shape": [self.m_pad, self.k_pad, self.n_pad],
+            "grid": [self.p_row, self.p_col],
+            "strategy": self.cfg.strategy,
+            "local_impl": self.local_impl,
+            "k_steps": self.k_steps,
+            "kb_width": self.kb_width,
+            "live_panels": len(self.live_panels),
+            "skipped_global": int(self.skipped_panels_global),
+            "skipped_per_device_mean": float(skipped.mean()),
+            "skipped_per_device_max": int(skipped.max()),
+            "fill_in": self.cost.fill_in,
+            "flops_dense": self.cost.flops_dense,
+            "flops_sparse": self.cost.flops_sparse,
+            "comm_bytes": {
+                s: float(v) for s, v in self.cost.comm_bytes.items()
+            },
+        }
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+
+def _panel_liveness(
+    a_mask: np.ndarray,
+    b_mask: np.ndarray,
+    k_steps: int,
+    p_row: int,
+    p_col: int,
+) -> tuple[list[int], np.ndarray, np.ndarray]:
+    """Global live panels, per-device liveness, per-grid-column liveness.
+
+    Returns ``(live, device_live, b_col)`` where ``device_live`` is
+    (p_row, p_col, k_steps) bool and ``b_col`` is the (p_col, k_steps)
+    per-grid-column panel liveness that ``_local_csr_cols`` reuses.
+    Per-device refinement is applied on each side only when that side's
+    block grid aligns with the device grid (blocks per shard is integral);
+    otherwise that side falls back to its global column/row test.
+    """
+    m_blk, k_blk = a_mask.shape
+    _, n_blk = b_mask.shape
+    assert k_blk == k_steps
+    a_any = a_mask.any(axis=0)  # (K_blk,)
+    b_any = b_mask.any(axis=1)
+    live = [kk for kk in range(k_steps) if a_any[kk] and b_any[kk]]
+
+    if m_blk % p_row == 0:
+        mb_loc = m_blk // p_row
+        a_row = np.array(
+            [
+                a_mask[i * mb_loc : (i + 1) * mb_loc, :].any(axis=0)
+                for i in range(p_row)
+            ]
+        )  # (p_row, K_blk)
+    else:
+        a_row = np.broadcast_to(a_any, (p_row, k_blk))
+    if n_blk % p_col == 0:
+        nb_loc = n_blk // p_col
+        b_col = np.array(
+            [
+                b_mask[:, j * nb_loc : (j + 1) * nb_loc].any(axis=1)
+                for j in range(p_col)
+            ]
+        )  # (p_col, K_blk)
+    else:
+        b_col = np.broadcast_to(b_any, (p_col, k_blk)).copy()
+    device_live = a_row[:, None, :] & b_col[None, :, :]
+    return live, device_live, b_col
+
+
+def _local_csr_cols(
+    a_mask: np.ndarray,
+    b_col: np.ndarray,
+    live: list[int],
+    p_row: int,
+    p_col: int,
+) -> np.ndarray:
+    """Per-device padded CSR column maps over the *gathered live panels*.
+
+    ``cols[i, j, ib, s]`` is the position (0..L-1) within the gathered
+    K-panel axis of the s-th live block for local block row ``ib`` on
+    device (i, j), or -1.  A block is live for (i, j, ib) when A's block
+    (global row ib, panel) is nonzero and the panel intersects B columns
+    owned by grid column j (``b_col`` from ``_panel_liveness``).
+    """
+    m_blk, _ = a_mask.shape
+    mb_loc = m_blk // p_row
+    rows: dict[tuple[int, int, int], list[int]] = {}
+    s_max = 1
+    for i in range(p_row):
+        for j in range(p_col):
+            for ib in range(mb_loc):
+                gb = i * mb_loc + ib
+                cols = [
+                    pos
+                    for pos, kk in enumerate(live)
+                    if a_mask[gb, kk] and b_col[j, kk]
+                ]
+                rows[(i, j, ib)] = cols
+                s_max = max(s_max, len(cols))
+    out = np.full((p_row, p_col, mb_loc, s_max), -1, dtype=np.int32)
+    for (i, j, ib), cols in rows.items():
+        out[i, j, ib, : len(cols)] = cols
+    return out
+
+
+def _pick_bn(n_loc: int, pref: int = 256) -> int:
+    """Largest divisor of ``n_loc`` not exceeding ``pref``."""
+    if n_loc <= pref:
+        return n_loc
+    for bn in range(pref, 0, -1):
+        if n_loc % bn == 0:
+            return bn
+    return n_loc
+
+
+def _pad_block_mask(
+    mask: np.ndarray, blocks_pad: tuple[int, int]
+) -> np.ndarray:
+    """Extend a block mask with all-zero pad blocks to the padded grid."""
+    rb, cb = mask.shape
+    out = np.zeros(blocks_pad, dtype=bool)
+    out[:rb, :cb] = mask
+    return out
+
+
+def _comm_model(
+    *,
+    m_loc: int,
+    n_loc: int,
+    k_pad: int,
+    kb_width: int,
+    live: int,
+    k_steps: int,
+    p_row: int,
+    p_col: int,
+    itemsize: int,
+) -> dict:
+    """Modeled per-device collective bytes for each execution strategy.
+
+    Broadcast-as-allreduce (the static-SPMD idiom ``_bcast_panel`` uses)
+    costs ~2x the panel bytes of a tree broadcast, and only globally-live
+    panels are broadcast — these numbers match what ``_exec_procedural``
+    / ``_exec_taskbased`` and both sparse executors actually move.  The
+    bulk all-gather (``_exec_allgather``) and the ring collective matmul
+    (``dist.collective_matmul.allgather_matmul``) are *sparsity-blind*:
+    they move the full remote shards regardless of masks, so their bytes
+    are not scaled by liveness (masked plans never execute them — the
+    numbers say what switching would cost).
+    """
+    del k_steps  # liveness already folded into `live`
+    # psum/all_gather over a size-1 axis moves nothing — gate each
+    # operand's term on its broadcast axis actually having peers.
+    panel = (
+        m_loc * kb_width * (p_col > 1) + kb_width * n_loc * (p_row > 1)
+    ) * itemsize
+    bcast = 2.0 * panel * live
+    allgather = itemsize * (
+        m_loc * k_pad * (p_col - 1) / max(p_col, 1)
+        + k_pad * n_loc * (p_row - 1) / max(p_row, 1)
+    )
+    ring = itemsize * (m_loc / max(p_col, 1)) * k_pad * (p_col - 1)
+    return {
+        "procedural": bcast,
+        "taskbased": bcast,
+        "allgather": allgather,
+        "ring": ring,
+    }
+
+
+def plan_matmul(
+    m: int,
+    k: int,
+    n: int,
+    cfg: SummaConfig,
+    *,
+    a_mask: np.ndarray | None = None,
+    b_mask: np.ndarray | None = None,
+    itemsize: int = 4,
+) -> MatmulPlan:
+    """Plan C = A @ B on ``cfg``'s grid; the single schedule source.
+
+    ``a_mask``/``b_mask`` are block masks over the *logical* shapes; block
+    sizes must divide them evenly.  Either may be ``None`` (treated as a
+    single all-ones block on that side).  Returns a plan whose
+    ``padded_shapes`` the caller pads operands to before
+    ``core.summa.execute_plan``.
+    """
+    if m <= 0 or k <= 0 or n <= 0:
+        raise ValueError(f"bad shape ({m},{k})x({k},{n})")
+    p_row, p_col = cfg.p_row, cfg.p_col
+    masked = a_mask is not None or b_mask is not None
+    if not masked:
+        kmult = math.lcm(p_row, p_col)
+        if cfg.k_blocks:
+            kmult = math.lcm(kmult, cfg.k_blocks)
+        m_pad = _ceil_to(m, p_row)
+        n_pad = _ceil_to(n, p_col)
+        k_pad = _ceil_to(k, kmult)
+        k_steps = cfg.resolve_k_blocks(k_pad)
+        kb_width = k_pad // k_steps
+        if (k_pad // p_col) % kb_width or (k_pad // p_row) % kb_width:
+            raise ValueError(
+                f"panel width {kb_width} must divide local K shards "
+                f"({k_pad // p_col}, {k_pad // p_row})"
+            )
+        m_loc, n_loc = m_pad // p_row, n_pad // p_col
+        flops = 2.0 * m_pad * k_pad * n_pad
+        cost = PlanCost(
+            flops_dense=flops,
+            flops_sparse=flops,
+            comm_bytes=_comm_model(
+                m_loc=m_loc, n_loc=n_loc, k_pad=k_pad, kb_width=kb_width,
+                live=k_steps, k_steps=k_steps, p_row=p_row, p_col=p_col,
+                itemsize=itemsize,
+            ),
+            fill_in=1.0,
+        )
+        return MatmulPlan(
+            cfg=cfg, m=m, k=k, n=n, m_pad=m_pad, k_pad=k_pad, n_pad=n_pad,
+            k_steps=k_steps, kb_width=kb_width,
+            live_panels=tuple(range(k_steps)),
+            a_mask=None, b_mask=None, device_live=None,
+            local_cols=None, local_block=None, local_impl="dense",
+            cost=cost, itemsize=itemsize,
+        )
+
+    # -- masked path ---------------------------------------------------------
+    # One-sided masks: synthesize all-ones blocking on the other side.
+    # Use one block per grid shard when the extent divides the grid (keeps
+    # padding minimal and the kernel block size large); otherwise a single
+    # block-per-element fallback so padding stays at the grid minimum.
+    if a_mask is None:
+        m_blocks = p_row if m % p_row == 0 else m
+        a_mask = np.ones((m_blocks, np.asarray(b_mask).shape[0]), dtype=bool)
+    if b_mask is None:
+        n_blocks = p_col if n % p_col == 0 else n
+        b_mask = np.ones((np.asarray(a_mask).shape[1], n_blocks), dtype=bool)
+    a_mask = np.asarray(a_mask, dtype=bool)
+    b_mask = np.asarray(b_mask, dtype=bool)
+    m_blk, k_blk = a_mask.shape
+    k_blk2, n_blk = b_mask.shape
+    if k_blk != k_blk2:
+        raise ValueError(
+            f"A col-blocks ({k_blk}) must equal B row-blocks ({k_blk2})"
+        )
+    if m % m_blk or k % k_blk or n % n_blk:
+        raise ValueError(
+            f"masks {a_mask.shape}/{b_mask.shape} must evenly block "
+            f"({m},{k})x({k},{n})"
+        )
+    bm_sz, bk_sz, bn_sz = m // m_blk, k // k_blk, n // n_blk
+    # Padded shapes stay block-divisible AND grid-divisible; K additionally
+    # keeps every panel inside a single device shard on both operands.
+    m_pad = _ceil_to(m, math.lcm(bm_sz, p_row))
+    n_pad = _ceil_to(n, math.lcm(bn_sz, p_col))
+    k_pad = _ceil_to(k, bk_sz * math.lcm(p_row, p_col))
+    a_mask_p = _pad_block_mask(a_mask, (m_pad // bm_sz, k_pad // bk_sz))
+    b_mask_p = _pad_block_mask(b_mask, (k_pad // bk_sz, n_pad // bn_sz))
+    k_steps = k_pad // bk_sz  # one panel per K block
+    kb_width = bk_sz
+    live, device_live, b_col = _panel_liveness(
+        a_mask_p, b_mask_p, k_steps, p_row, p_col
+    )
+    m_blk_p = m_pad // bm_sz
+
+    local_cols = None
+    local_block = None
+    local_impl = "masked"
+    # BSMM needs row blocks aligned to the grid and big enough to make a
+    # sane kernel block (>= 8 rows: TPU sublane minimum).
+    if (
+        cfg.local_matmul == "pallas"
+        and live
+        and m_blk_p % p_row == 0
+        and bm_sz >= 8
+    ):
+        local_cols = _local_csr_cols(a_mask_p, b_col, live, p_row, p_col)
+        local_block = (bm_sz, kb_width, _pick_bn(n_pad // p_col))
+        local_impl = "bsmm"
+
+    sparse, dense = mask_matmul_flops(a_mask_p, b_mask_p, bm_sz, bk_sz, bn_sz)
+    m_loc, n_loc = m_pad // p_row, n_pad // p_col
+    cost = PlanCost(
+        flops_dense=float(dense),
+        flops_sparse=float(sparse),
+        comm_bytes=_comm_model(
+            m_loc=m_loc, n_loc=n_loc, k_pad=k_pad, kb_width=kb_width,
+            live=len(live), k_steps=k_steps, p_row=p_row, p_col=p_col,
+            itemsize=itemsize,
+        ),
+        fill_in=float(sparse) / float(dense) if dense else 0.0,
+    )
+    return MatmulPlan(
+        cfg=cfg, m=m, k=k, n=n, m_pad=m_pad, k_pad=k_pad, n_pad=n_pad,
+        k_steps=k_steps, kb_width=kb_width, live_panels=tuple(live),
+        a_mask=a_mask_p, b_mask=b_mask_p, device_live=device_live,
+        local_cols=local_cols, local_block=local_block,
+        local_impl=local_impl, cost=cost, itemsize=itemsize,
+    )

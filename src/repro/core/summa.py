@@ -1,9 +1,12 @@
 """Task-based 2D SUMMA, adapted to static SPMD on TPU meshes.
 
 Implements the paper's algorithm family as `shard_map` programs over a
-2-D slice ``(row_axis, col_axis)`` of a device mesh:
+2-D slice ``(row_axis, col_axis)`` of a device mesh.  Since the
+``MatmulPlan`` refactor every entry point builds one static plan
+(``core.plan.plan_matmul``) and hands it to ``execute_plan``; the
+strategies below are *plan interpreters*:
 
-* ``summa_procedural`` — the paper's *baseline* (its Algorithm 1 without
+* ``_exec_procedural`` — the paper's *baseline* (its Algorithm 1 without
   the non-blocking part): a sequential K-step loop; each step broadcasts
   one column-panel of A along grid rows and one row-panel of B along grid
   columns, then performs the rank-k update.  Iterations are serialized
@@ -11,7 +14,7 @@ Implements the paper's algorithm family as `shard_map` programs over a
   iterations, mirroring procedural SUMMA's sequence dependencies (paper
   Fig. 1, dashed edges).
 
-* ``summa_taskbased`` — the paper's contribution (§3.2), statically
+* ``_exec_taskbased`` — the paper's contribution (§3.2), statically
   scheduled: *multiple-issue* lookahead of ``I`` iterations (paper Eq. 1)
   realised as an ``I``-deep panel-prefetch pipeline.  The broadcast for
   step ``k+I`` is issued in iteration ``k`` and is data-independent of
@@ -19,15 +22,20 @@ Implements the paper's algorithm family as `shard_map` programs over a
   overlaps ICI transfers with MXU compute — the static analogue of
   MADNESS tasks firing on data availability.
 
-* ``summa_allgather`` — the ``I = K_steps`` extreme of Eq. 1 (every
+* ``_exec_allgather`` — the ``I = K_steps`` extreme of Eq. 1 (every
   broadcast issued up-front), i.e. one all-gather per operand followed by
   a local GEMM.  Maximum memory, minimum exposure to per-step latency.
 
-* ``summa_blocksparse`` — static block-sparsity: panels whose blocks are
-  entirely zero are *skipped at trace time* (no broadcast, no compute),
-  and surviving rank-k updates are masked (or run through the Pallas
-  block-sparse kernel).  Communication volume shrinks with the block
-  fill-in — the paper's "step towards block-sparse tensor computing".
+* ``_exec_sparse_dag`` — static block-sparsity: panels the plan marks
+  globally dead are *skipped at trace time* (no broadcast, no compute),
+  and surviving rank-k updates run on masked operands.  Communication
+  volume shrinks with the block fill-in.
+
+* ``_exec_sparse_bsmm`` — the plan's per-device refinement: live panels
+  are gathered once, then the Pallas scalar-prefetch BSMM kernel
+  (kernels/bsmm.py) consumes *this device's* CSR column map — blocks
+  dead for this grid row/column are never loaded or multiplied, so local
+  FLOPs scale with the per-device fill-in, finer than global pruning.
 
 Broadcast realisation: a panel broadcast from its owner is expressed as a
 masked ``psum`` ("broadcast-as-allreduce"), the standard static-SPMD
@@ -45,14 +53,15 @@ of both grid dims unless it equals them).  Over-decomposition (paper
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Callable, Literal, Sequence
+from typing import Any, Callable, Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from jax.sharding import Mesh
 
 from repro.compat import shard_map
 
@@ -61,6 +70,7 @@ __all__ = [
     "multi_issue_limit",
     "reference_matmul",
     "reference_blocksparse_matmul",
+    "execute_plan",
     "summa_matmul",
     "summa_blocksparse_matmul",
     "summa_25d_matmul",
@@ -94,7 +104,7 @@ class SummaConfig:
     lookahead: int | None = None  # None => paper Eq. (1)
     accum_dtype: Any = jnp.float32
     # Local block-multiply implementation: "xla" (jnp.dot) or "pallas"
-    # (kernels.tiled_matmul, interpret-mode on CPU).
+    # (kernels.tiled_matmul dense / kernels.bsmm block-sparse).
     local_matmul: Literal["xla", "pallas"] = "xla"
 
     def _axis_size(self, axis) -> int:
@@ -197,7 +207,7 @@ def _local_dot(a_panel, b_panel, accum, cfg: SummaConfig):
     return accum + prod
 
 
-def _panel_slices(a_loc, b_loc, k, kb_width, t_a, t_b, p_row, p_col):
+def _panel_slices(a_loc, b_loc, k, kb_width, t_a, t_b):
     """Extract the k-th K-panel slices + their owners from local shards.
 
     Global panel k lives in A's grid-column ``k // t_a`` at local panel
@@ -212,19 +222,22 @@ def _panel_slices(a_loc, b_loc, k, kb_width, t_a, t_b, p_row, p_col):
 
 
 # ---------------------------------------------------------------------------
-# Strategies (local, inside shard_map)
+# Plan interpreters (local, inside shard_map)
 # ---------------------------------------------------------------------------
 
 
-def _summa_local_procedural(a_loc, b_loc, cfg: SummaConfig, k_steps, kb_width):
+def _exec_procedural(a_loc, b_loc, plan, *, k_steps=None, k_start=0):
     """Paper baseline: sequential iterations, no cross-iteration overlap."""
+    cfg = plan.cfg
+    kb_width = plan.kb_width
+    k_steps = plan.k_steps if k_steps is None else k_steps
     m_loc, n_loc = a_loc.shape[0], b_loc.shape[1]
-    t_a = (a_loc.shape[1] // kb_width)
-    t_b = (b_loc.shape[0] // kb_width)
+    t_a = a_loc.shape[1] // kb_width
+    t_b = b_loc.shape[0] // kb_width
 
     def body(k, c_acc):
         a_panel, b_panel, owner_col, owner_row = _panel_slices(
-            a_loc, b_loc, k, kb_width, t_a, t_b, cfg.p_row, cfg.p_col
+            a_loc, b_loc, k + k_start, kb_width, t_a, t_b
         )
         a_bc = _bcast_panel(a_panel, owner_col, cfg.col_axis)
         b_bc = _bcast_panel(b_panel, owner_row, cfg.row_axis)
@@ -234,9 +247,7 @@ def _summa_local_procedural(a_loc, b_loc, cfg: SummaConfig, k_steps, kb_width):
     return jax.lax.fori_loop(0, k_steps, body, c0)
 
 
-def _summa_local_taskbased(
-    a_loc, b_loc, cfg: SummaConfig, k_steps, kb_width, k_start=0
-):
+def _exec_taskbased(a_loc, b_loc, plan, *, k_steps=None, k_start=0):
     """Multiple-issue SUMMA: I-deep panel prefetch pipeline (paper §3.2).
 
     The carry holds ``I`` broadcast panels.  Iteration ``k`` consumes the
@@ -245,6 +256,9 @@ def _summa_local_taskbased(
     ``k_start`` (possibly traced) offsets the panel range — the 2.5D
     variant gives each replica pod its own K sub-range.
     """
+    cfg = plan.cfg
+    kb_width = plan.kb_width
+    k_steps = plan.k_steps if k_steps is None else k_steps
     m_loc, n_loc = a_loc.shape[0], b_loc.shape[1]
     t_a = a_loc.shape[1] // kb_width
     t_b = b_loc.shape[0] // kb_width
@@ -253,7 +267,7 @@ def _summa_local_taskbased(
     def fetch(k):
         k = k + k_start
         a_panel, b_panel, owner_col, owner_row = _panel_slices(
-            a_loc, b_loc, k, kb_width, t_a, t_b, cfg.p_row, cfg.p_col
+            a_loc, b_loc, k, kb_width, t_a, t_b
         )
         return (
             _bcast_panel(a_panel, owner_col, cfg.col_axis),
@@ -296,23 +310,167 @@ def _summa_local_taskbased(
     return c_acc
 
 
-def _summa_local_allgather(a_loc, b_loc, cfg: SummaConfig, k_steps, kb_width):
+def _exec_allgather(a_loc, b_loc, plan, *, k_steps=None, k_start=0):
     """I = K extreme of Eq. (1): gather every panel up-front."""
+    cfg = plan.cfg
     a_full = jax.lax.all_gather(a_loc, cfg.col_axis, axis=1, tiled=True)
     b_full = jax.lax.all_gather(b_loc, cfg.row_axis, axis=0, tiled=True)
     c0 = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), cfg.accum_dtype)
     return _local_dot(a_full, b_full, c0, cfg)
 
 
-_LOCAL_IMPLS: dict[str, Callable] = {
-    "procedural": _summa_local_procedural,
-    "taskbased": _summa_local_taskbased,
-    "allgather": _summa_local_allgather,
+def _bcast_live_panels(a_loc, b_loc, plan):
+    """Broadcast every globally-live panel (static unroll).
+
+    One (A, B) broadcast pair per live panel, sliced and owner-addressed
+    through ``_panel_slices`` so the sparse executors share the dense
+    pipeline's panel layout.  Returns the two lists of broadcast panels.
+    """
+    cfg = plan.cfg
+    kb_width = plan.kb_width
+    t_a = a_loc.shape[1] // kb_width
+    t_b = b_loc.shape[0] // kb_width
+    a_parts = []
+    b_parts = []
+    for kk in plan.live_panels:
+        a_panel, b_panel, owner_col, owner_row = _panel_slices(
+            a_loc, b_loc, kk, kb_width, t_a, t_b
+        )
+        a_parts.append(_bcast_panel(a_panel, owner_col, cfg.col_axis))
+        b_parts.append(_bcast_panel(b_panel, owner_row, cfg.row_axis))
+    return a_parts, b_parts
+
+
+def _exec_sparse_dag(a_loc, b_loc, plan):
+    """Globally-live panels as a fully unrolled static task DAG.
+
+    The closest XLA analogue of the paper's task graph: every surviving
+    broadcast is independent of every rank-k update except its own, giving
+    the scheduler maximal freedom to overlap (multiple-issue falls out for
+    free).  Dead panels are absent from the trace entirely.
+    """
+    cfg = plan.cfg
+    m_loc, n_loc = a_loc.shape[0], b_loc.shape[1]
+    c = jnp.zeros((m_loc, n_loc), cfg.accum_dtype)
+    a_parts, b_parts = _bcast_live_panels(a_loc, b_loc, plan)
+    for a_bc, b_bc in zip(a_parts, b_parts):
+        c = _local_dot(a_bc, b_bc, c, cfg)
+    return c
+
+
+def _exec_sparse_bsmm(a_loc, b_loc, cols_loc, plan):
+    """Per-device block-sparse rank-k update via the Pallas BSMM kernel.
+
+    Gathers the globally-live panels (same broadcast traffic as the DAG
+    executor), then runs ONE scalar-prefetch kernel over the gathered
+    operands with this device's CSR column map: blocks dead for this grid
+    row/column are never copied to VMEM nor multiplied, so local FLOPs
+    follow the per-device fill-in the planner computed.
+    """
+    from repro.kernels.bsmm import bsmm_pallas
+
+    cfg = plan.cfg
+    a_parts, b_parts = _bcast_live_panels(a_loc, b_loc, plan)
+    a_g = jnp.concatenate(a_parts, axis=1)  # (m_loc, L*kb)
+    b_g = jnp.concatenate(b_parts, axis=0)  # (L*kb, n_loc)
+    bm, bk, bn = plan.local_block
+    c = bsmm_pallas(
+        a_g,
+        b_g,
+        cols_loc,
+        bm=bm,
+        bk=bk,
+        bn=bn,
+        out_dtype=cfg.accum_dtype,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return c.astype(cfg.accum_dtype)
+
+
+_EXEC_IMPLS: dict[str, Callable] = {
+    "procedural": _exec_procedural,
+    "taskbased": _exec_taskbased,
+    "allgather": _exec_allgather,
 }
 
 
 # ---------------------------------------------------------------------------
-# Public entry point
+# Plan execution (the single entry into shard_map)
+# ---------------------------------------------------------------------------
+
+
+def execute_plan(
+    a: jax.Array,
+    b: jax.Array,
+    plan,
+    *,
+    out_dtype: Any | None = None,
+) -> jax.Array:
+    """Run C = A @ B according to a precomputed ``core.plan.MatmulPlan``.
+
+    ``a``/``b`` must already be padded to ``plan.padded_shapes`` and
+    sharded P(row_axis, col_axis).  Every public matmul entry point —
+    dense, block-sparse, nonuniform — funnels through here.
+    """
+    cfg = plan.cfg
+    (mp, kp), (_, np_) = plan.padded_shapes
+    if a.shape != (mp, kp) or b.shape != (kp, np_):
+        raise ValueError(
+            f"operands {a.shape} @ {b.shape} do not match the plan's padded "
+            f"shapes ({mp},{kp}) @ ({kp},{np_})"
+        )
+    out_dtype = out_dtype or a.dtype
+    spec2 = P(cfg.row_axis, cfg.col_axis)
+    if plan.a_mask is not None:
+        # Zero masked blocks so padded/garbage data cannot contribute.
+        a = _apply_block_mask(a, plan.a_mask)
+        b = _apply_block_mask(b, plan.b_mask)
+
+    if plan.local_impl == "bsmm":
+        cols = jnp.asarray(plan.local_cols)
+        cols_spec = P(cfg.row_axis, cfg.col_axis, None, None)
+
+        def fn_bsmm(a_loc, b_loc, cols_loc):
+            c = _exec_sparse_bsmm(a_loc, b_loc, cols_loc[0, 0], plan)
+            return c.astype(out_dtype)
+
+        return shard_map(
+            fn_bsmm,
+            mesh=cfg.mesh,
+            in_specs=(spec2, spec2, cols_spec),
+            out_specs=spec2,
+            check_vma=False,
+        )(a, b, cols)
+
+    if plan.local_impl == "masked":
+
+        def fn_masked(a_loc, b_loc):
+            return _exec_sparse_dag(a_loc, b_loc, plan).astype(out_dtype)
+
+        return shard_map(
+            fn_masked,
+            mesh=cfg.mesh,
+            in_specs=(spec2, spec2),
+            out_specs=spec2,
+            check_vma=False,
+        )(a, b)
+
+    local = _EXEC_IMPLS[cfg.strategy]
+
+    def fn_dense(a_loc, b_loc):
+        return local(a_loc, b_loc, plan).astype(out_dtype)
+
+    return shard_map(
+        fn_dense,
+        mesh=cfg.mesh,
+        in_specs=(spec2, spec2),
+        out_specs=spec2,
+        check_vma=False,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points (thin wrappers planning + executing)
 # ---------------------------------------------------------------------------
 
 
@@ -330,6 +488,8 @@ def summa_matmul(
     Shapes must divide evenly by the grid (use core.api.DistributedMatmul
     for auto-padding).
     """
+    from repro.core.plan import plan_matmul
+
     (m, k), (k2, n) = a.shape, b.shape
     if k != k2:
         raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
@@ -338,29 +498,13 @@ def summa_matmul(
         raise ValueError(
             f"shapes ({m},{k})x({k2},{n}) must divide grid ({p_row},{p_col})"
         )
-    k_steps = cfg.resolve_k_blocks(k)
-    kb_width = k // k_steps
-    # Each panel must live inside one device's K shard.
-    if (k // p_col) % kb_width or (k // p_row) % kb_width:
+    plan = plan_matmul(m, k, n, cfg, itemsize=a.dtype.itemsize)
+    if plan.padded_shapes != (a.shape, b.shape):
         raise ValueError(
-            f"panel width {kb_width} must divide local K shards "
-            f"({k // p_col}, {k // p_row})"
+            f"shapes ({m},{k})x({k2},{n}) need padding for grid/k_blocks; "
+            "use core.api.DistributedMatmul for auto-padding"
         )
-    local = _LOCAL_IMPLS[cfg.strategy]
-    out_dtype = out_dtype or a.dtype
-
-    def fn(a_loc, b_loc):
-        c = local(a_loc, b_loc, cfg, k_steps, kb_width)
-        return c.astype(out_dtype)
-
-    spec2 = P(cfg.row_axis, cfg.col_axis)
-    return shard_map(
-        fn,
-        mesh=cfg.mesh,
-        in_specs=(spec2, spec2),
-        out_specs=spec2,
-        check_vma=False,
-    )(a, b)
+    return execute_plan(a, b, plan, out_dtype=out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -386,23 +530,35 @@ def summa_25d_matmul(
     Per-replica broadcast traffic drops by c at the cost of c× operand
     memory + one C all-reduce over ``rep_axis``.
     """
+    from repro.core.plan import plan_matmul
+
     (m, k), (k2, n) = a.shape, b.shape
     if k != k2:
         raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
+    if rep_axis not in cfg.mesh.shape:
+        raise ValueError(
+            f"rep_axis {rep_axis!r} is not a mesh axis; "
+            f"available: {tuple(cfg.mesh.shape)}"
+        )
     c_rep = cfg.mesh.shape[rep_axis]
-    k_steps = cfg.resolve_k_blocks(k)
+    plan = plan_matmul(m, k, n, cfg, itemsize=a.dtype.itemsize)
+    if plan.padded_shapes != (a.shape, b.shape):
+        raise ValueError(
+            f"shapes ({m},{k})x({k2},{n}) need padding for grid/k_blocks"
+        )
+    k_steps = plan.k_steps
     if k_steps % c_rep:
-        raise ValueError(f"k_blocks={k_steps} must divide replicas={c_rep}")
-    kb_width = k // k_steps
-    if (k // cfg.p_col) % kb_width or (k // cfg.p_row) % kb_width:
-        raise ValueError("panel width must divide local K shards")
+        raise ValueError(
+            f"replica count {c_rep} (mesh axis {rep_axis!r}) must divide "
+            f"k_blocks={k_steps} so each replica owns an equal K sub-range"
+        )
     per_rep = k_steps // c_rep
     out_dtype = out_dtype or a.dtype
 
     def fn(a_loc, b_loc):
         k_start = jax.lax.axis_index(rep_axis) * per_rep
-        c_acc = _summa_local_taskbased(
-            a_loc, b_loc, cfg, per_rep, kb_width, k_start=k_start
+        c_acc = _exec_taskbased(
+            a_loc, b_loc, plan, k_steps=per_rep, k_start=k_start
         )
         c_acc = jax.lax.psum(c_acc, rep_axis)
         return c_acc.astype(out_dtype)
@@ -435,69 +591,28 @@ def summa_blocksparse_matmul(
 
     ``a_mask``: (M_blk, K_blk) bool; ``b_mask``: (K_blk, N_blk) bool — the
     *static* block-structure (distance decay / screening in the paper's
-    domain).  One SUMMA panel per K block.  Panels with no nonzero block
-    in A's column *and* B's row are skipped at trace time: neither their
-    broadcast nor their rank-k update is emitted, so collective bytes and
-    (with the Pallas local kernel) FLOPs both scale with the fill-in.
-
-    The schedule is a fully unrolled static DAG — the closest XLA analogue
-    of the paper's task graph: every surviving broadcast is independent of
-    every rank-k update except its own, giving the scheduler maximal
-    freedom to overlap (multiple-issue falls out for free).
+    domain).  One SUMMA panel per K block.  Panels the plan marks globally
+    dead are skipped at trace time (no broadcast, no compute); with
+    ``local_matmul="pallas"`` the surviving panels run through the BSMM
+    scalar-prefetch kernel on the plan's per-device CSR maps, so FLOPs
+    follow the per-device fill-in.
     """
-    a_mask = np.asarray(a_mask, dtype=bool)
-    b_mask = np.asarray(b_mask, dtype=bool)
+    from repro.core.plan import plan_matmul
+
     (m, k), (k2, n) = a.shape, b.shape
     if k != k2:
         raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
-    m_blk, k_blk = a_mask.shape
-    k_blk2, n_blk = b_mask.shape
-    if k_blk != k_blk2:
-        raise ValueError("A col-blocks must equal B row-blocks")
-    p_row, p_col = cfg.p_row, cfg.p_col
-    if m % p_row or n % p_col or k % k_blk:
-        raise ValueError("shape/grid/blocking mismatch")
-    kb_width = k // k_blk
-    if (k // p_col) % kb_width or (k // p_row) % kb_width:
+    plan = plan_matmul(
+        m, k, n, cfg, a_mask=a_mask, b_mask=b_mask,
+        itemsize=a.dtype.itemsize,
+    )
+    if plan.padded_shapes != (a.shape, b.shape):
         raise ValueError(
-            f"K blocks ({k_blk}) must subdivide both grid shards"
+            f"shape/grid/blocking mismatch: ({m},{k})x({k2},{n}) on grid "
+            f"({cfg.p_row},{cfg.p_col}) with {plan.k_steps} K blocks needs "
+            f"padding to {plan.padded_shapes}; use core.api.DistributedMatmul"
         )
-    # Zero out masked blocks so any padded/garbage data cannot contribute.
-    a_z = _apply_block_mask(a, a_mask)
-    b_z = _apply_block_mask(b, b_mask)
-
-    alive = [
-        kk
-        for kk in range(k_blk)
-        if a_mask[:, kk].any() and b_mask[kk, :].any()
-    ]
-    t_a = k_blk // p_col
-    t_b = k_blk // p_row
-    out_dtype = out_dtype or a.dtype
-
-    def fn(a_loc, b_loc):
-        m_loc, n_loc = a_loc.shape[0], b_loc.shape[1]
-        c = jnp.zeros((m_loc, n_loc), cfg.accum_dtype)
-        for kk in alive:  # static unroll: a task DAG, not a loop
-            a_panel = jax.lax.slice_in_dim(
-                a_loc, (kk % t_a) * kb_width, (kk % t_a + 1) * kb_width, axis=1
-            )
-            b_panel = jax.lax.slice_in_dim(
-                b_loc, (kk % t_b) * kb_width, (kk % t_b + 1) * kb_width, axis=0
-            )
-            a_bc = _bcast_panel(a_panel, kk // t_a, cfg.col_axis)
-            b_bc = _bcast_panel(b_panel, kk // t_b, cfg.row_axis)
-            c = _local_dot(a_bc, b_bc, c, cfg)
-        return c.astype(out_dtype)
-
-    spec2 = P(cfg.row_axis, cfg.col_axis)
-    return shard_map(
-        fn,
-        mesh=cfg.mesh,
-        in_specs=(spec2, spec2),
-        out_specs=spec2,
-        check_vma=False,
-    )(a_z, b_z)
+    return execute_plan(a, b, plan, out_dtype=out_dtype)
 
 
 def _apply_block_mask(x: jax.Array, mask: np.ndarray) -> jax.Array:

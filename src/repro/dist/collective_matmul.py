@@ -10,10 +10,21 @@ projections (models/ffn.py).  It routes by ``ctx.matmul_strategy``:
 * ``"allgather"`` — ``allgather_matmul`` below: a ring collective matmul
   over the TP axis that overlaps the activation all-gather with the
   per-chunk GEMMs using the same multiple-issue lookahead idiom as
-  ``core.summa._summa_local_taskbased`` (paper Eq. (1)); it is the
-  ``I = K`` communication pattern realised as a pipeline instead of one
-  bulk gather.  See EXPERIMENTS.md §Perf for the trade-off between the
-  two non-XLA strategies.
+  ``core.summa._exec_taskbased`` (paper Eq. (1)); it is the ``I = K``
+  communication pattern realised as a pipeline instead of one bulk
+  gather.  See EXPERIMENTS.md §Perf for the trade-off between the two
+  non-XLA strategies.
+* ``"auto"`` — per-shape pick: the ``MatmulPlan`` cost model compares
+  modeled collective bytes of the ring, SUMMA, and allgather schedules
+  (sparsity-aware when a weight mask is present) and routes to the
+  cheapest.
+
+``project`` also accepts an optional block mask over the weight
+(``w_mask``, or one registered in ``ctx.weight_block_masks``): the
+planned schedule then prunes dead K panels and, with the Pallas local
+kernel, runs the per-device block-CSR BSMM — the paper's block-sparse
+path embedded in the LM.  The xla path zeroes masked blocks so every
+strategy computes the same masked product.
 
 All strategies accumulate in fp32 and return the activation dtype, so
 swapping them changes only the schedule, not the arithmetic contract.
@@ -24,6 +35,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
@@ -31,31 +43,73 @@ from repro.compat import shard_map
 __all__ = ["project", "allgather_matmul"]
 
 
-def project(x: jax.Array, w: jax.Array, ctx) -> jax.Array:
+def _mask_weight(w: jax.Array, w_mask: np.ndarray) -> jax.Array:
+    """Zero masked blocks of a (d_in, d_out) weight (einsum-path parity)."""
+    from repro.core.summa import _apply_block_mask
+
+    return _apply_block_mask(w, np.asarray(w_mask, dtype=bool))
+
+
+def _ring_eligible(ctx, x2: jax.Array, w: jax.Array) -> bool:
+    return (
+        ctx.tp_size > 1
+        and x2.shape[0] % (ctx.dp_size * ctx.tp_size) == 0
+        and w.shape[-1] % ctx.tp_size == 0
+    )
+
+
+def project(
+    x: jax.Array,
+    w: jax.Array,
+    ctx,
+    *,
+    w_mask: np.ndarray | None = None,
+) -> jax.Array:
     """``x @ w`` with the context's matmul strategy.
 
     ``x``: (..., d_in) activations; ``w``: (d_in, d_out) kernel.  Leading
     dims are flattened into SUMMA's M dimension and restored afterwards.
-    Meshless contexts always take the einsum path so smoke tests and
-    eval_shape tracing never build collectives.
+    ``w_mask`` is an optional (Kblk, Nblk) block mask over the weight;
+    when omitted, ``ctx.weight_block_masks`` is consulted for the weight
+    shape.  Meshless contexts always take the einsum path so smoke tests
+    and eval_shape tracing never build collectives.
     """
+    if w_mask is None:
+        w_mask = ctx.weight_mask(w.shape)
     if ctx.matmul_strategy == "xla" or not ctx.has_mesh or ctx.pure_dp:
+        if w_mask is not None:
+            w = _mask_weight(w, w_mask)
         return jnp.einsum(
             "...d,df->...f", x, w, preferred_element_type=jnp.float32
         ).astype(x.dtype)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if (
-        ctx.matmul_strategy == "allgather"
-        and ctx.tp_size > 1
-        and x2.shape[0] % (ctx.dp_size * ctx.tp_size) == 0
-        and w.shape[-1] % ctx.tp_size == 0
-    ):
+    strategy = ctx.matmul_strategy
+    ring_ok = _ring_eligible(ctx, x2, w)
+    if strategy == "auto":
+        if w_mask is not None:
+            # Masked plans always execute the planned broadcast schedule
+            # (DAG or BSMM) — the gather-style executors are sparsity-
+            # blind, so there is nothing to pick between.
+            strategy = "summa"
+        else:
+            # One cached plan per shape carries modeled bytes per schedule.
+            plan = ctx.matmul().plan(
+                x2.shape[0], x2.shape[1], w.shape[1],
+                itemsize=x2.dtype.itemsize,
+            )
+            candidates = ["taskbased", "allgather"] + (
+                ["ring"] if ring_ok else []
+            )
+            pick = plan.cost.best_strategy(tuple(candidates))
+            strategy = {"taskbased": "summa", "ring": "ring"}.get(pick, pick)
+    if strategy in ("allgather", "ring") and ring_ok and w_mask is None:
         out = allgather_matmul(
             x2, w, mesh=ctx.mesh, axis=ctx.tp_axis, batch_axes=ctx.dp_axes
         )
     else:
-        out = ctx.matmul()(x2, w)
+        summa_strategy = {"summa": None, "ring": None}.get(strategy, strategy)
+        out = ctx.matmul()(x2, w, b_mask=w_mask, strategy=summa_strategy)
     return out.reshape(*lead, w.shape[-1])
 
 
@@ -79,7 +133,7 @@ def allgather_matmul(
     chunk it already holds against its weight columns — transfer ``g+1``
     is issued before GEMM ``g`` consumes its buffer, so the two overlap
     exactly as the prefetch pipeline in
-    ``core.summa._summa_local_taskbased``.  ``lookahead`` is the pipeline
+    ``core.summa._exec_taskbased``.  ``lookahead`` is the pipeline
     depth I of paper Eq. (1): ``I`` ring hops are in flight at any time
     (clamped to the shard count).
 

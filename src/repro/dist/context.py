@@ -32,6 +32,9 @@ _MATMUL_STRATEGIES = {
     "xla": None,  # plain jnp.einsum, XLA chooses the collectives
     "summa": "taskbased",  # paper Eq. (1) multiple-issue SUMMA
     "allgather": "allgather",  # I = K endpoint of Eq. (1)
+    # per-shape pick via the MatmulPlan cost model (ring vs SUMMA vs
+    # allgather); the engine defaults to taskbased when costs tie.
+    "auto": "taskbased",
 }
 
 
@@ -49,13 +52,18 @@ class ParallelCtx:
     mesh: Mesh | None
     dp_axes: tuple[str, ...] = ("data",)
     tp_axis: str | None = "model"
-    matmul_strategy: str = "xla"  # "xla" | "summa" | "allgather"
+    matmul_strategy: str = "xla"  # "xla" | "summa" | "allgather" | "auto"
     attention_impl: str = "ref"  # "ref" | "chunked"
     mlstm_chunk: int | None = None
     zero1: bool = False
     kv_quant: bool = False
     slstm_replicated: bool = False
     pure_dp: bool = False
+    # Static block-sparsity of projection weights: maps (d_in, d_out) ->
+    # bool block mask.  ``project`` consults it so sparse FFN weights run
+    # the planned block-sparse schedule (and the xla path stays masked for
+    # an identical arithmetic contract).
+    weight_block_masks: Any = None
 
     def __post_init__(self):
         if isinstance(self.dp_axes, str):
@@ -113,6 +121,14 @@ class ParallelCtx:
             return x
         return jax.lax.with_sharding_constraint(x, self.named(*entries))
 
+    # -- static weight sparsity ----------------------------------------------
+
+    def weight_mask(self, shape) -> Any:
+        """Block mask registered for a (d_in, d_out) weight shape, if any."""
+        if not self.weight_block_masks:
+            return None
+        return self.weight_block_masks.get(tuple(shape))
+
     # -- the paper's engine --------------------------------------------------
 
     def matmul(self) -> Any:
@@ -141,3 +157,21 @@ class ParallelCtx:
             strategy=strategy,
         )
         return self._mm_cache
+
+    def plan_projection(self, m: int, d_in: int, d_out: int, *, itemsize=4):
+        """Pre-build (and cache) the plan for an (m, d_in)x(d_in, d_out)
+        projection — call outside jit so traced call paths (scanned
+        layers, prefill vs decode shapes) hit the plan cache instead of
+        re-deriving the schedule at trace time.  No-op on the xla path.
+        """
+        if (
+            not self.has_mesh
+            or self.matmul_strategy == "xla"
+            or self.pure_dp
+        ):
+            return None
+        return self.matmul().plan(
+            m, d_in, d_out,
+            b_mask=self.weight_mask((d_in, d_out)),
+            itemsize=itemsize,
+        )

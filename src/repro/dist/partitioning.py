@@ -27,7 +27,6 @@ import math
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["param_specs", "param_shardings", "_validate_spec"]

@@ -7,13 +7,12 @@ the *same* kernel code that targets the MXU.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparsity import BlockCSR, block_csr_from_mask
+from repro.core.sparsity import block_csr_from_mask
 from repro.kernels import ref
 from repro.kernels.bsmm import bsmm_pallas
 from repro.kernels.flash_attention import flash_attention_pallas

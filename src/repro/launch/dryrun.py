@@ -17,7 +17,6 @@ derives the three roofline terms (analysis.hlo) recorded as JSON for
 EXPERIMENTS.md §Dry-run / §Roofline.
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -329,7 +328,7 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--microbatches", type=int, default=DEFAULT_MICROBATCHES)
     ap.add_argument("--matmul-strategy", default="xla",
-                    choices=["xla", "summa", "allgather"])
+                    choices=["xla", "summa", "allgather", "auto"])
     ap.add_argument("--attention", default="ref", choices=["ref", "chunked"])
     ap.add_argument("--mlstm-chunk", type=int, default=None)
     ap.add_argument("--zero1", action="store_true")

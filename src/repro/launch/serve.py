@@ -34,13 +34,19 @@ def main(argv=None):
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--matmul-strategy", default="xla",
+        choices=["xla", "summa", "allgather", "auto"],
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.family == "audio":
         raise SystemExit("encoder-only arch has no autoregressive serving")
     mesh = make_host_mesh(args.dp, args.tp)
-    ctx = ParallelCtx(mesh=mesh)
+    ctx = ParallelCtx(mesh=mesh, matmul_strategy=args.matmul_strategy)
+    # Derive all projection schedules once, outside the jitted traces.
+    engine.warm_matmul_plans(cfg, ctx, args.batch, args.prompt_len)
     rng = jax.random.PRNGKey(args.seed)
     max_len = args.prompt_len + args.gen
 

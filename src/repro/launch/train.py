@@ -21,12 +21,9 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.dist.context import ParallelCtx
-from repro.dist.partitioning import param_shardings
 from repro.launch.mesh import make_host_mesh
 from repro.train import checkpoint as ckpt
 from repro.train import train_step as ts
@@ -47,7 +44,7 @@ def main(argv=None):
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--matmul-strategy", default="xla",
-                    choices=["xla", "summa", "allgather"])
+                    choices=["xla", "summa", "allgather", "auto"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")

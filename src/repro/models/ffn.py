@@ -5,6 +5,10 @@ is constrained back to the activation sharding (GSPMD emits the
 reduce-scatter/all-reduce).  The big matmuls can optionally run through
 the task-based SUMMA engine (``matmul_strategy="summa"``, see
 dist/collective_matmul.py) — the paper's algorithm embedded in the LM.
+Block masks registered in ``ctx.weight_block_masks`` flow through each
+projection: the shared ``MatmulPlan`` then prunes dead K panels (and,
+with the Pallas local kernel, dead per-device blocks) instead of
+multiplying masked weights densely.
 """
 from __future__ import annotations
 
@@ -34,6 +38,7 @@ def ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx) -> jax.Array:
 
     h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
     act = L.ACTIVATIONS[cfg.activation]
+    # project() resolves ctx.weight_block_masks per weight shape itself.
     up = project(h, p["w_up"]["w"], ctx)
     up = ctx.wsc(up, ctx.dp, None, ctx.tp_axis)
     if "w_gate" in p:

@@ -13,7 +13,6 @@ Inputs are a dict: ``tokens`` (B, S) int32 and/or ``embeds`` (B, S, D)
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -162,10 +162,23 @@ def moe_ffn(
     e_pad = padded_experts(moe, ctx.tp_size)
     cap = capacity(moe, s, e_pad)
 
+    # Registered block masks over the (d, f) expert weight shapes: zero the
+    # masked blocks so every expert computes the same block-sparse product
+    # the planned FFN path would (MoE *is* block-sparse tensor computing —
+    # this keeps the arithmetic contract aligned across the stack).
+    w_gate_e, w_up_e, w_down_e = p["w_gate"], p["w_up"], p["w_down"]
+    m_in = ctx.weight_mask(w_gate_e.shape[1:])
+    m_out = ctx.weight_mask(w_down_e.shape[1:])
+    if m_in is not None:
+        w_gate_e = _mask_expert_weight(w_gate_e, m_in)
+        w_up_e = _mask_expert_weight(w_up_e, m_in)
+    if m_out is not None:
+        w_down_e = _mask_expert_weight(w_down_e, m_out)
+
     if ctx.mesh is None or ctx.mesh.empty:
         # single-device fallback: one "shard" holding all experts
         y = _dispatch_compute_combine_local(
-            h, topi, gates, p["w_gate"], p["w_up"], p["w_down"],
+            h, topi, gates, w_gate_e, w_up_e, w_down_e,
             e_pad=e_pad, top_k=moe.top_k, cap=cap,
         )
     else:
@@ -191,7 +204,7 @@ def moe_ffn(
             ),
             out_specs=act,
             check_vma=False,
-        )(h, topi, gates, p["w_gate"], p["w_up"], p["w_down"])
+        )(h, topi, gates, w_gate_e, w_up_e, w_down_e)
 
     if "shared" in p:
         from repro.models.ffn import ffn as dense_ffn
@@ -202,6 +215,19 @@ def moe_ffn(
         # ffn() norms internally with p["shared"]["norm"].
         y = y + dense_ffn(p["shared"], x, _shared_view(cfg), ctx)
     return y.astype(x.dtype), aux
+
+
+def _mask_expert_weight(w: jax.Array, mask) -> jax.Array:
+    """Zero masked (d, f) blocks of a stacked (E, d, f) expert weight."""
+    import numpy as np
+
+    mask = np.asarray(mask, dtype=bool)
+    _, d, f = w.shape
+    rb, cb = mask.shape
+    if d % rb or f % cb:
+        raise ValueError(f"weight {w.shape} not divisible by mask {mask.shape}")
+    fine = jnp.asarray(np.repeat(np.repeat(mask, d // rb, 0), f // cb, 1))
+    return jnp.where(fine[None], w, jnp.zeros((), w.dtype))
 
 
 def _shared_view(cfg: ModelConfig) -> ModelConfig:

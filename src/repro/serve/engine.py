@@ -16,8 +16,6 @@ Layout mirrors the model: stacked caches per scan unit + unrolled tail.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +39,39 @@ from repro.models.recurrent import (
     slstm_step,
 )
 
-__all__ = ["init_cache", "prefill", "decode_step", "cache_len"]
+__all__ = [
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "cache_len",
+    "warm_matmul_plans",
+]
+
+
+def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
+                      prompt_len: int):
+    """Pre-derive the SUMMA ``MatmulPlan``s for every projection shape the
+    serving traces will request — prefill flattens (B, S, D) activations
+    to M = B*S rows, decode to M = B — so the jitted prefill/decode paths
+    hit ``DistributedMatmul``'s plan cache instead of re-deriving the
+    schedule (numpy panel liveness, CSR maps, cost model) inside tracing.
+    Returns the warmed plans; no-op (empty) on the plain-einsum path.
+    """
+    if not ctx.has_mesh or ctx.matmul_strategy == "xla" or ctx.pure_dp:
+        return []
+    d = cfg.d_model
+    ffs = [cfg.d_ff] if cfg.d_ff else []
+    if cfg.moe is not None and cfg.moe.num_shared_experts:
+        ffs.append(cfg.moe.d_ff * cfg.moe.num_shared_experts)
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    plans = []
+    for m in (batch * prompt_len, batch):
+        for f in ffs:
+            for k_in, n_out in ((d, f), (f, d)):
+                plans.append(
+                    ctx.plan_projection(m, k_in, n_out, itemsize=itemsize)
+                )
+    return [p for p in plans if p is not None]
 
 
 def cache_len(cfg: ModelConfig, max_len: int) -> int:

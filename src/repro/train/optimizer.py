@@ -11,7 +11,6 @@ Both include global-norm clipping and a linear-warmup + cosine schedule.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable
 
 import jax

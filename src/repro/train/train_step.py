@@ -9,17 +9,16 @@ applies once — exact arithmetic match to the unaccumulated step.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.context import ParallelCtx
-from repro.dist.partitioning import param_shardings, param_specs
+from repro.dist.partitioning import param_shardings
 from repro.models.config import ModelConfig
 from repro.models.model import init_model, loss_fn
-from repro.train.optimizer import Optimizer, OptimizerConfig, make_optimizer
+from repro.train.optimizer import Optimizer
 
 __all__ = ["make_train_state", "build_train_step", "state_shardings", "batch_shardings"]
 

@@ -2,7 +2,6 @@
 scan (trip-count weighting of dot FLOPs)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.analysis.hlo import analyze_hlo, roofline
 

@@ -164,3 +164,48 @@ def test_allgather_matmul_overlapped_subprocess(subproc):
     must be exact on a real 8-device mesh at every lookahead depth."""
     out = subproc(ALLGATHER_MM_CODE, devices=8)
     assert "ALLGATHER_MM_OK" in out
+
+
+PROJECT_AUTO_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import random_block_mask
+from repro.core.summa import reference_blocksparse_matmul
+from repro.dist.context import ParallelCtx
+from repro.dist.collective_matmul import project
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+w = jnp.asarray(rng.normal(size=(64, 24)), jnp.float32)
+want = np.asarray(jnp.einsum("md,df->mf", x, w))
+ctx = ParallelCtx(mesh=mesh, matmul_strategy="auto")
+got = np.asarray(project(x, w, ctx))
+assert np.abs(got - want).max() < 1e-4
+# the cost model must rank the ring cheapest for this dense shape (it
+# moves each activation chunk once; broadcast-as-allreduce moves ~2x)
+plan = ctx.matmul().plan(16, 64, 24, itemsize=4)
+assert plan.cost.best_strategy(("taskbased", "allgather", "ring")) == "ring"
+# a weight mask reroutes auto onto the planned sparse schedule and still
+# matches the masked oracle (the ring is sparsity-blind)
+bm = random_block_mask(8, 4, 0.5, seed=7)
+ctxm = ParallelCtx(mesh=mesh, matmul_strategy="auto",
+                   weight_block_masks={(64, 24): bm})
+gotm = np.asarray(project(x, w, ctxm))
+wantm = np.asarray(reference_blocksparse_matmul(
+    x, w, np.ones((1, 8), bool), bm))
+assert np.abs(gotm - wantm).max() < 1e-4
+# xla path applies the same mask for an identical arithmetic contract
+ctxx = ParallelCtx(mesh=mesh, matmul_strategy="xla",
+                   weight_block_masks={(64, 24): bm})
+gotx = np.asarray(project(x, w, ctxx))
+assert np.abs(gotx - wantm).max() < 1e-4
+print("PROJECT_AUTO_OK")
+"""
+
+
+def test_project_auto_strategy_and_weight_masks(subproc):
+    """matmul_strategy='auto' picks by the MatmulPlan cost model and
+    weight block masks route every strategy onto the same masked
+    product."""
+    out = subproc(PROJECT_AUTO_CODE, devices=8)
+    assert "PROJECT_AUTO_OK" in out

@@ -1,10 +1,9 @@
 """Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.sparsity import block_csr_from_mask, random_block_mask
+from repro.core.sparsity import random_block_mask
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(0)

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.dist.context import ParallelCtx
-from repro.models.model import forward, init_model, loss_fn
+from repro.models.model import forward, init_model
 from repro.train.optimizer import OptimizerConfig, make_optimizer
 from repro.train.train_step import build_train_step, make_train_state
 

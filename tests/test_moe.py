@@ -1,7 +1,6 @@
 """MoE layer: routing exactness vs a dense loop-over-experts oracle,
 capacity-drop accounting, EP sharding equivalence in a subprocess."""
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ pass logits (fp32, no-drop MoE capacity to make the oracle exact)."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

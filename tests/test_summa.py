@@ -1,16 +1,13 @@
 """Distributed SUMMA correctness: single-device in-process + 8-device
 subprocess (real shard_map semantics across a 2x4 / 2x2x2 mesh)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (
     DistributedMatmul,
-    SummaConfig,
     multi_issue_limit,
     reference_matmul,
-    summa_matmul,
 )
 from repro.launch.mesh import make_host_mesh
 

@@ -2,7 +2,6 @@
 SUMMA-strategy training matches XLA-strategy training; serving generates.
 """
 import numpy as np
-import pytest
 
 
 def test_training_reduces_loss(tmp_path):
