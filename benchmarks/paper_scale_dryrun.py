@@ -8,6 +8,13 @@ Lowers + compiles the task-based SUMMA for the paper's matrix sizes
 (N = 32768 / 65536, block 256) on the 16x16 production mesh and the
 2x16x16 multi-pod mesh, for every strategy, and reports roofline terms.
 
+Every cell routes through the ``plan_matmul`` / ``execute_plan``
+front-ends (the 2.5D variant passes its precomputed plan to
+``summa_25d_matmul``), so the compiled numbers reflect plan pruning and —
+for the ``tuned`` cell — the schedule the autotuner picked.  Each cell
+also records the discrete-event simulator's predicted makespan next to
+the roofline bound, so predicted and structural costs land side by side.
+
     PYTHONPATH=src python -m benchmarks.paper_scale_dryrun
 """
 import json
@@ -18,12 +25,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.hlo import analyze_hlo, roofline
-from repro.core.summa import SummaConfig, summa_25d_matmul, summa_matmul
+from repro.core.plan import plan_matmul
+from repro.core.summa import SummaConfig, execute_plan, summa_25d_matmul
 from repro.launch.mesh import make_production_mesh
+from repro.sched.simulator import simulate_plan
+from repro.sched.tuner import tune_plan
 
 
 def run(n: int, strategy: str, k_blocks: int, multi_pod: bool = False,
-        two_five_d: bool = False):
+        two_five_d: bool = False, tune: bool = False):
     mesh = make_production_mesh(multi_pod=multi_pod)
     row_axis = (
         "data" if two_five_d
@@ -35,10 +45,18 @@ def run(n: int, strategy: str, k_blocks: int, multi_pod: bool = False,
     )
     a = jax.ShapeDtypeStruct((n, n), jnp.bfloat16)
     b = jax.ShapeDtypeStruct((n, n), jnp.bfloat16)
-    mm = summa_25d_matmul if two_five_d else summa_matmul
+    plan = plan_matmul(n, n, n, cfg, itemsize=2)
+    if tune:
+        plan = tune_plan(plan)
+    assert plan.padded_shapes == (a.shape, b.shape), "paper sizes divide grid"
+    if two_five_d:
+        mm = lambda a, b: summa_25d_matmul(a, b, cfg, plan=plan)
+    else:
+        mm = lambda a, b: execute_plan(a, b, plan)
+    sim = simulate_plan(plan)
     t0 = time.time()
     with mesh:
-        lowered = jax.jit(lambda a, b: mm(a, b, cfg)).lower(a, b)
+        lowered = jax.jit(mm).lower(a, b)
         compiled = lowered.compile()
         hlo = compiled.as_text()
         mem = compiled.memory_analysis()
@@ -50,13 +68,17 @@ def run(n: int, strategy: str, k_blocks: int, multi_pod: bool = False,
     )
     return {
         "n": n,
-        "strategy": strategy,
-        "k_blocks": k_blocks,
+        "strategy": plan.cfg.strategy if tune else strategy,
+        "k_blocks": plan.k_steps,
+        "lookahead": plan.resolve_lookahead(),
+        "tuned": plan.tuned,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "compile_s": round(time.time() - t0, 1),
         "compute_s": rep.compute_s,
         "memory_s": rep.memory_s,
         "collective_s": rep.collective_s,
+        "sim_makespan_s": sim.makespan_s,
+        "sim_efficiency": sim.efficiency,
         "dominant": rep.dominant,
         "bound_s": rep.bound_s,
         "frac": rep.compute_s / rep.bound_s if rep.bound_s else 0.0,
@@ -67,18 +89,23 @@ def run(n: int, strategy: str, k_blocks: int, multi_pod: bool = False,
 
 def main():
     out = []
-    for strategy, kb in [
-        ("procedural", 16),
-        ("taskbased", 16),
-        ("taskbased", 128),  # over-decomposition: 8 panels per grid col
-        ("allgather", 16),
+    for tag, strategy, kb, kwargs in [
+        ("procedural ", "procedural", 16, {}),
+        ("taskbased  ", "taskbased", 16, {}),
+        ("taskbased  ", "taskbased", 128, {}),  # over-decomposition
+        ("allgather  ", "allgather", 16, {}),
+        ("tuned      ", "taskbased", 16, dict(tune=True)),
     ]:
-        r = run(32_768, strategy, kb)
+        r = run(32_768, strategy, kb, **kwargs)
+        if kwargs.get("tune"):
+            r["variant"] = "tuned"
         out.append(r)
         print(
-            f"N=32768 {strategy:11s} k={kb:4d} [{r['mesh']}]: "
+            f"N=32768 {tag} k={r['k_blocks']:4d} I={r['lookahead']:3d} "
+            f"[{r['mesh']}]: "
             f"compute={r['compute_s']*1e3:7.2f}ms mem={r['memory_s']*1e3:7.2f}ms "
-            f"coll={r['collective_s']*1e3:7.2f}ms dom={r['dominant']:10s} "
+            f"coll={r['collective_s']*1e3:7.2f}ms "
+            f"sim={r['sim_makespan_s']*1e3:7.2f}ms dom={r['dominant']:10s} "
             f"frac={r['frac']:.3f} temp={r['temp_gb']:.2f}GB",
             flush=True,
         )
@@ -90,9 +117,10 @@ def main():
         r["variant"] = tag.strip()
         out.append(r)
         print(
-            f"N=32768 {tag} k=  32 [{r['mesh']}]: "
+            f"N=32768 {tag} k=  32 I={r['lookahead']:3d} [{r['mesh']}]: "
             f"compute={r['compute_s']*1e3:7.2f}ms mem={r['memory_s']*1e3:7.2f}ms "
-            f"coll={r['collective_s']*1e3:7.2f}ms dom={r['dominant']:10s} "
+            f"coll={r['collective_s']*1e3:7.2f}ms "
+            f"sim={r['sim_makespan_s']*1e3:7.2f}ms dom={r['dominant']:10s} "
             f"frac={r['frac']:.3f}",
             flush=True,
         )

@@ -270,14 +270,152 @@ def bench_planned_sparse(json_path: str) -> None:
     print(f"# wrote {json_path}", flush=True)
 
 
+def bench_sched(json_path: str) -> None:
+    """Schedule-simulator record -> BENCH_sched.json.
+
+    Three sections: (1) predicted vs measured makespan for dense products
+    on the local host mesh — the FLOP rate is calibrated once on the
+    smallest case, every other prediction must land within 30 % of wall
+    time; (2) the paper's imbalance-absorption result on a simulated
+    nonuniform 16x16 grid (multi-issue I = Eq. 1 vs I = 1); (3) the
+    autotuner vs the static cost-model pick on virtual grids — tuned
+    simulated makespan is never worse.
+    """
+    import json
+    import time as _t
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import DistributedMatmul
+    from repro.core.blocking import nonuniform_tiling
+    from repro.core.plan import plan_matmul
+    from repro.launch.mesh import make_host_mesh
+    from repro.sched import (
+        MachineModel,
+        abstract_summa_config,
+        eq1_lookahead,
+        from_tilings,
+        simulate,
+        simulate_plan,
+        tune_plan,
+    )
+
+    entries = []
+    mesh = make_host_mesh(1, 1)
+    mm = DistributedMatmul(mesh, strategy="taskbased", k_blocks=4)
+    rng = np.random.default_rng(0)
+
+    def timed(n):
+        a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+        f = jax.jit(lambda a, b: mm(a, b))
+        out = f(a, b)
+        out.block_until_ready()
+        t0 = _t.perf_counter()
+        for _ in range(3):
+            out = f(a, b)
+        out.block_until_ready()
+        return (_t.perf_counter() - t0) / 3
+
+    # (1) calibrate the machine FLOP rate on one compute-bound dense case,
+    # then predict the rest: the 30% acceptance band of EXPERIMENTS.md.
+    # (Sub-1k sizes are launch-overhead-bound on this host and sit outside
+    # the model — the protocol calibrates and predicts in the GEMM regime.)
+    n0 = 1024
+    wall0 = timed(n0)
+    machine = MachineModel(
+        flops_per_s=2.0 * n0**3 / wall0, name="local-calibrated"
+    )
+    for n in (n0, 1536, 2048):
+        wall = wall0 if n == n0 else timed(n)
+        plan = mm.plan(n, n, n)
+        sim = simulate_plan(plan, machine)
+        rel = abs(sim.makespan_s - wall) / wall
+        entries.append(
+            {
+                "name": f"local_dense_N{n}",
+                "grid": [1, 1],
+                "predicted_makespan_s": sim.makespan_s,
+                "measured_wall_s": wall,
+                "rel_err": rel,
+                "within_30pct": bool(rel <= 0.30),
+                "chosen_lookahead": plan.resolve_lookahead(),
+                "imbalance_ratio": sim.imbalance_ratio,
+                "calibration": n == n0,
+            }
+        )
+        _row(
+            f"sched_local_dense_N{n}", wall * 1e6,
+            f"pred_ms={sim.makespan_s*1e3:.2f};meas_ms={wall*1e3:.2f};"
+            f"rel_err={rel:.2f}",
+        )
+
+    # (2) nonuniform imbalance absorption on a virtual 16x16 grid
+    # (EXPERIMENTS.md §Simulated scaling workload: N=4096, 64 nonuniform
+    # blocks per dimension drawn by the paper's §4.1 procedure)
+    tilings = [nonuniform_tiling(4096, 64, seed=s) for s in (1, 2, 3)]
+    s1 = simulate(from_tilings(16, 16, *tilings, lookahead=1))
+    se = simulate(from_tilings(16, 16, *tilings))
+    speedup = s1.makespan_s / se.makespan_s
+    entries.append(
+        {
+            "name": "sim_nonuniform_P256_N4096",
+            "grid": [16, 16],
+            "chosen_lookahead": eq1_lookahead(16, 16, 64),
+            "makespan_I1_s": s1.makespan_s,
+            "makespan_eq1_s": se.makespan_s,
+            "multi_issue_speedup": speedup,
+            "imbalance_ratio": se.imbalance_ratio,
+        }
+    )
+    _row(
+        "sched_sim_nonuniform_P256", se.makespan_s * 1e6,
+        f"speedup_vs_I1={speedup:.2f};imbalance={se.imbalance_ratio:.2f}",
+    )
+
+    # (3) tuner vs the static cost-model choice on virtual grids
+    for pr, pc, n in ((4, 4, 4096), (16, 16, 8192)):
+        cfg = abstract_summa_config(pr, pc, strategy="taskbased")
+        tuned = tune_plan(plan_matmul(n, n, n, cfg))
+        t = tuned.tuned
+        entries.append(
+            {
+                "name": f"tuned_P{pr*pc}_N{n}",
+                "grid": [pr, pc],
+                "strategy_static": t["static_strategy"],
+                "strategy_tuned": t["strategy"],
+                "chosen_lookahead": t["lookahead"],
+                "k_blocks": t["k_blocks"],
+                "makespan_static_s": t["static_makespan_s"],
+                "makespan_tuned_s": t["makespan_s"],
+                "tuner_not_worse": bool(
+                    t["makespan_s"] <= t["static_makespan_s"] * (1 + 1e-9)
+                ),
+                "imbalance_ratio": t["imbalance_ratio"],
+            }
+        )
+        _row(
+            f"sched_tuned_P{pr*pc}_N{n}", t["makespan_s"] * 1e6,
+            f"static={t['static_strategy']};tuned={t['strategy']};"
+            f"I={t['lookahead']};speedup={t['speedup_vs_static']:.2f}",
+        )
+    with open(json_path, "w") as f:
+        json.dump({"bench": "sched", "entries": entries}, f, indent=2)
+    print(f"# wrote {json_path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default="BENCH_summa.json")
+    ap.add_argument("--sched-json", default="BENCH_sched.json")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     bench_table1()
     bench_planned_sparse(args.json)
+    bench_sched(args.sched_json)
     bench_blocksparse()
     bench_strategies()
     bench_weak_scaling(args.quick)

@@ -109,11 +109,17 @@ class DistributedMatmul:
         b_mask: np.ndarray | None = None,
         strategy: str | None = None,
         itemsize: int = 4,
+        tune: bool = False,
     ) -> MatmulPlan:
-        """The (cached) execution plan for a (M, K) x (K, N) product."""
+        """The (cached) execution plan for a (M, K) x (K, N) product.
+
+        ``tune=True`` runs the schedule autotuner (repro.sched.tuner) over
+        the plan: the cached result carries the simulated-makespan-optimal
+        strategy / k_blocks / lookahead instead of the static config.
+        """
         key = (
             m, k, n, mask_key(a_mask), mask_key(b_mask),
-            strategy or self.strategy, itemsize,
+            strategy or self.strategy, itemsize, tune,
         )
         plan = self._plan_cache.get(key)
         if plan is None:
@@ -121,6 +127,10 @@ class DistributedMatmul:
                 m, k, n, self.config(strategy),
                 a_mask=a_mask, b_mask=b_mask, itemsize=itemsize,
             )
+            if tune:
+                from repro.sched.tuner import tune_plan  # deferred: no cycle
+
+                plan = tune_plan(plan)
             self._plan_cache[key] = plan
         return plan
 
@@ -134,6 +144,7 @@ class DistributedMatmul:
         a_mask: np.ndarray | None = None,
         b_mask: np.ndarray | None = None,
         strategy: str | None = None,
+        tune: bool = False,
     ) -> jax.Array:
         m, k = a.shape
         k2, n = b.shape
@@ -141,7 +152,7 @@ class DistributedMatmul:
             raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
         plan = self.plan(
             m, k, n, a_mask=a_mask, b_mask=b_mask, strategy=strategy,
-            itemsize=a.dtype.itemsize,
+            itemsize=a.dtype.itemsize, tune=tune,
         )
         (mp, kp), (_, np_) = plan.padded_shapes
         a_p = _pad_to_shape(a, (mp, kp))

@@ -31,7 +31,7 @@ import math
 import numpy as np
 
 from repro.core.sparsity import mask_matmul_flops
-from repro.core.summa import SummaConfig
+from repro.core.summa import SummaConfig, resolve_multi_issue
 
 __all__ = ["MatmulPlan", "PlanCost", "plan_matmul", "mask_key"]
 
@@ -99,6 +99,13 @@ class MatmulPlan:
     local_impl: str  # "dense" | "masked" | "bsmm"
     cost: PlanCost
     itemsize: int
+    # Per-plan multiple-issue window (paper Eq. 1).  ``None`` defers to
+    # ``cfg.resolve_lookahead``; the schedule autotuner (repro.sched.tuner)
+    # sets it, and ``core.summa._exec_taskbased`` honors it.
+    lookahead: int | None = None
+    # Search record attached by ``repro.sched.tuner.tune_plan`` (winning
+    # strategy/k_blocks/lookahead, simulated makespan, static baseline).
+    tuned: dict | None = None
 
     # -- geometry -----------------------------------------------------------
 
@@ -113,6 +120,17 @@ class MatmulPlan:
     @property
     def padded_shapes(self) -> tuple[tuple[int, int], tuple[int, int]]:
         return (self.m_pad, self.k_pad), (self.k_pad, self.n_pad)
+
+    def resolve_lookahead(self, k_steps: int | None = None) -> int:
+        """The multiple-issue window executed for this plan: the tuned
+        per-plan value when set, else the config's Eq.-(1) resolution."""
+        if k_steps is None:
+            k_steps = self.k_steps
+        if self.lookahead is not None:
+            return resolve_multi_issue(
+                self.p_row, self.p_col, k_steps, self.lookahead
+            )
+        return self.cfg.resolve_lookahead(k_steps)
 
     # -- pruning accounting --------------------------------------------------
 
@@ -148,6 +166,8 @@ class MatmulPlan:
             "skipped_global": int(self.skipped_panels_global),
             "skipped_per_device_mean": float(skipped.mean()),
             "skipped_per_device_max": int(skipped.max()),
+            "lookahead": self.resolve_lookahead(),
+            "tuned": self.tuned,
             "fill_in": self.cost.fill_in,
             "flops_dense": self.cost.flops_dense,
             "flops_sparse": self.cost.flops_sparse,

@@ -68,6 +68,7 @@ from repro.compat import shard_map
 __all__ = [
     "SummaConfig",
     "multi_issue_limit",
+    "resolve_multi_issue",
     "reference_matmul",
     "reference_blocksparse_matmul",
     "execute_plan",
@@ -86,6 +87,20 @@ def multi_issue_limit(p_row: int, p_col: int, k_steps: int) -> int:
     if p_row >= k_steps and p_col >= k_steps:
         return k_steps
     return min(p_row, p_col)
+
+
+def resolve_multi_issue(
+    p_row: int, p_col: int, k_steps: int, lookahead: int | None = None
+) -> int:
+    """The executed multiple-issue window: ``lookahead`` when given, Eq. (1)
+    otherwise — always clamped to ``[1, max(k_steps, 1)]`` so degenerate
+    schedules (k_steps of 0 or 1, windows beyond the panel count) stay
+    well-formed.  The single clamp shared by ``SummaConfig``,
+    ``MatmulPlan``, and the ``repro.sched`` graph builders."""
+    cap = max(k_steps, 1)
+    if lookahead is not None:
+        return max(1, min(lookahead, cap))
+    return max(1, min(multi_issue_limit(p_row, p_col, k_steps), cap))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,9 +153,10 @@ class SummaConfig:
         return kb
 
     def resolve_lookahead(self, k_steps: int) -> int:
-        if self.lookahead is not None:
-            return max(1, min(self.lookahead, k_steps))
-        return min(multi_issue_limit(self.p_row, self.p_col, k_steps), k_steps)
+        """The executed multiple-issue window (see ``resolve_multi_issue``)."""
+        return resolve_multi_issue(
+            self.p_row, self.p_col, k_steps, self.lookahead
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -262,7 +278,8 @@ def _exec_taskbased(a_loc, b_loc, plan, *, k_steps=None, k_start=0):
     m_loc, n_loc = a_loc.shape[0], b_loc.shape[1]
     t_a = a_loc.shape[1] // kb_width
     t_b = b_loc.shape[0] // kb_width
-    lookahead = cfg.resolve_lookahead(k_steps)
+    # Per-plan window (tuner-chosen) wins over the config's Eq.-(1) default.
+    lookahead = plan.resolve_lookahead(k_steps)
 
     def fetch(k):
         k = k + k_start
@@ -520,6 +537,7 @@ def summa_25d_matmul(
     *,
     rep_axis: str = "pod",
     out_dtype: Any | None = None,
+    plan=None,
 ) -> jax.Array:
     """2.5D task-based SUMMA: operands replicated over ``rep_axis`` (c
     copies), each replica executes a disjoint 1/c of the SUMMA iterations
@@ -529,6 +547,9 @@ def summa_25d_matmul(
 
     Per-replica broadcast traffic drops by c at the cost of c× operand
     memory + one C all-reduce over ``rep_axis``.
+
+    ``plan`` accepts a precomputed (possibly tuned) ``MatmulPlan`` for
+    these shapes; by default one is derived here.
     """
     from repro.core.plan import plan_matmul
 
@@ -541,7 +562,8 @@ def summa_25d_matmul(
             f"available: {tuple(cfg.mesh.shape)}"
         )
     c_rep = cfg.mesh.shape[rep_axis]
-    plan = plan_matmul(m, k, n, cfg, itemsize=a.dtype.itemsize)
+    if plan is None:
+        plan = plan_matmul(m, k, n, cfg, itemsize=a.dtype.itemsize)
     if plan.padded_shapes != (a.shape, b.shape):
         raise ValueError(
             f"shapes ({m},{k})x({k2},{n}) need padding for grid/k_blocks"

@@ -14,10 +14,13 @@ projections (models/ffn.py).  It routes by ``ctx.matmul_strategy``:
   communication pattern realised as a pipeline instead of one bulk
   gather.  See EXPERIMENTS.md §Perf for the trade-off between the two
   non-XLA strategies.
-* ``"auto"`` — per-shape pick: the ``MatmulPlan`` cost model compares
-  modeled collective bytes of the ring, SUMMA, and allgather schedules
-  (sparsity-aware when a weight mask is present) and routes to the
-  cheapest.
+* ``"auto"`` — per-shape pick by *simulated time*: the schedule
+  autotuner (repro.sched.tuner) searches lookahead x k_blocks x strategy
+  over the discrete-event simulator and executes the winner (its tuned
+  lookahead included); the ring is routed to when its pipeline estimate
+  beats the tuned SUMMA-family makespan.  This replaces the old static
+  bytes tie-break — the ``MatmulPlan`` cost model remains the byte
+  source, the simulator adds overlap and imbalance.
 
 ``project`` also accepts an optional block mask over the weight
 (``w_mask``, or one registered in ``ctx.weight_block_masks``): the
@@ -86,30 +89,38 @@ def project(
     x2 = x.reshape(-1, x.shape[-1])
     strategy = ctx.matmul_strategy
     ring_ok = _ring_eligible(ctx, x2, w)
+    tune = False
     if strategy == "auto":
         if w_mask is not None:
             # Masked plans always execute the planned broadcast schedule
             # (DAG or BSMM) — the gather-style executors are sparsity-
-            # blind, so there is nothing to pick between.
+            # blind; the tuner still picks the lookahead window.
             strategy = "summa"
+            tune = True
         else:
-            # One cached plan per shape carries modeled bytes per schedule.
+            # One cached tuned plan per shape: the simulator-searched
+            # schedule (strategy x k_blocks x lookahead), vs. the ring's
+            # pipeline estimate when the ring is eligible.
+            from repro.sched.tuner import ring_makespan
+
             plan = ctx.matmul().plan(
                 x2.shape[0], x2.shape[1], w.shape[1],
-                itemsize=x2.dtype.itemsize,
+                itemsize=x2.dtype.itemsize, tune=True,
             )
-            candidates = ["taskbased", "allgather"] + (
-                ["ring"] if ring_ok else []
-            )
-            pick = plan.cost.best_strategy(tuple(candidates))
-            strategy = {"taskbased": "summa", "ring": "ring"}.get(pick, pick)
+            if ring_ok and ring_makespan(plan) < plan.tuned["makespan_s"]:
+                strategy = "ring"
+            else:
+                strategy = "summa"
+                tune = True
     if strategy in ("allgather", "ring") and ring_ok and w_mask is None:
         out = allgather_matmul(
             x2, w, mesh=ctx.mesh, axis=ctx.tp_axis, batch_axes=ctx.dp_axes
         )
     else:
         summa_strategy = {"summa": None, "ring": None}.get(strategy, strategy)
-        out = ctx.matmul()(x2, w, b_mask=w_mask, strategy=summa_strategy)
+        out = ctx.matmul()(
+            x2, w, b_mask=w_mask, strategy=summa_strategy, tune=tune
+        )
     return out.reshape(*lead, w.shape[-1])
 
 

@@ -158,11 +158,16 @@ class ParallelCtx:
         )
         return self._mm_cache
 
-    def plan_projection(self, m: int, d_in: int, d_out: int, *, itemsize=4):
+    def plan_projection(
+        self, m: int, d_in: int, d_out: int, *, itemsize=4, tune=False
+    ):
         """Pre-build (and cache) the plan for an (m, d_in)x(d_in, d_out)
         projection — call outside jit so traced call paths (scanned
         layers, prefill vs decode shapes) hit the plan cache instead of
         re-deriving the schedule at trace time.  No-op on the xla path.
+        ``tune=True`` additionally runs the schedule autotuner (what the
+        ``"auto"`` strategy executes), so the simulator search also
+        happens outside tracing.
         """
         if (
             not self.has_mesh
@@ -174,4 +179,5 @@ class ParallelCtx:
             m, d_in, d_out,
             b_mask=self.weight_mask((d_in, d_out)),
             itemsize=itemsize,
+            tune=tune,
         )

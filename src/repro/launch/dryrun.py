@@ -250,6 +250,14 @@ def run_cell(
         microbatches = max(1, min(microbatches,
                                   shape.global_batch // ctx.dp_size))
         result["microbatches"] = microbatches
+    # Derive + simulate (and for "auto": tune) the projection schedules
+    # first, so the traces below hit the warmed plan cache.
+    try:
+        sched = sched_section(cfg, shape, ctx, microbatches)
+    except Exception as e:  # simulation must never sink a dry-run cell
+        sched = [{"status": f"sched-error: {type(e).__name__}: {e}"}]
+    if sched is not None:
+        result["sched"] = sched
     t0 = time.time()
     with mesh:
         if shape.kind == "train":
@@ -302,6 +310,57 @@ def run_cell(
         with open(save_hlo, "w") as f:
             f.write(hlo_text)
     return result
+
+
+def sched_section(cfg, shape, ctx, microbatches: int) -> list | None:
+    """Simulated projection schedules for this cell (repro.sched).
+
+    For every FFN projection shape the cell will trace, derive (and with
+    ``matmul_strategy="auto"`` tune) the ``MatmulPlan``, then run its task
+    DAG through the discrete-event simulator: predicted makespan,
+    imbalance, and the executed lookahead land next to the roofline terms
+    in the cell JSON.  Plans are cached, so the subsequent trace reuses
+    them.
+    """
+    if not ctx.has_mesh or ctx.matmul_strategy == "xla" or ctx.pure_dp:
+        return None
+    if not cfg.d_ff:
+        return None
+    from repro.sched.simulator import simulate_plan
+
+    if shape.kind == "train":
+        m = (shape.global_batch // max(microbatches, 1)) * shape.seq_len
+    elif shape.kind == "prefill":
+        m = shape.global_batch * shape.seq_len
+    else:
+        m = shape.global_batch
+    tune = ctx.matmul_strategy == "auto"
+    # plan under the activation dtype's itemsize, or the traces below plan
+    # under a different cache key and re-derive (serve.warm_matmul_plans
+    # makes the same move)
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    out = []
+    d = cfg.d_model
+    for k_in, n_out in ((d, cfg.d_ff), (cfg.d_ff, d)):
+        plan = ctx.plan_projection(
+            m, k_in, n_out, itemsize=itemsize, tune=tune
+        )
+        if plan is None:
+            continue
+        sim = simulate_plan(plan)
+        out.append(
+            {
+                "proj": [m, k_in, n_out],
+                "strategy": plan.cfg.strategy,
+                "lookahead": plan.resolve_lookahead(),
+                "k_steps": plan.k_steps,
+                "sim_makespan_s": sim.makespan_s,
+                "sim_imbalance": sim.imbalance_ratio,
+                "sim_efficiency": sim.efficiency,
+                "tuned": plan.tuned,
+            }
+        )
+    return out
 
 
 def _mem_dict(mem) -> dict:

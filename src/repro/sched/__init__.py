@@ -1,0 +1,51 @@
+"""repro.sched: explicit task graphs, schedule simulation, and autotuning.
+
+The paper's contribution is a *scheduler* — fine-grained tasks with real
+dependency edges, multiple-issue lookahead (Eq. 1), imbalance absorbed
+by overlap.  ``core.summa`` executes that schedule; this package reasons
+about it:
+
+* ``taskgraph``  — materialize a ``MatmulPlan`` (or nonuniform tilings)
+  into broadcast/gemm/accumulate tasks with FLOP/byte costs.
+* ``simulator``  — discrete-event simulation: per-device clocks, comm
+  model shared with ``plan.PlanCost``, makespan / busy / imbalance /
+  Chrome-trace outputs; scales to thousands of virtual devices.
+* ``tuner``      — search lookahead x k_blocks x strategy over the
+  simulator; feeds the winner back into ``plan_matmul`` /
+  ``matmul_strategy="auto"`` / ``serve.warm_matmul_plans``.
+
+CLI: ``python -m repro.sched --grid 4 4 --extent 2048 --nonuniform``.
+"""
+from repro.sched.simulator import (
+    DEFAULT_MACHINE,
+    MachineModel,
+    SimResult,
+    simulate,
+    simulate_plan,
+)
+from repro.sched.taskgraph import (
+    Task,
+    TaskGraph,
+    abstract_summa_config,
+    eq1_lookahead,
+    from_plan,
+    from_tilings,
+)
+from repro.sched.tuner import lookahead_candidates, ring_makespan, tune_plan
+
+__all__ = [
+    "DEFAULT_MACHINE",
+    "MachineModel",
+    "SimResult",
+    "simulate",
+    "simulate_plan",
+    "Task",
+    "TaskGraph",
+    "abstract_summa_config",
+    "eq1_lookahead",
+    "from_plan",
+    "from_tilings",
+    "lookahead_candidates",
+    "ring_makespan",
+    "tune_plan",
+]

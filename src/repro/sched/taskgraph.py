@@ -1,0 +1,460 @@
+"""Materialize a matmul schedule as an explicit fine-grained task DAG.
+
+The paper's task formulation (§3.2) expresses one SUMMA iteration as a
+small family of tasks — broadcast the A column-panel, broadcast the B
+row-panel, run the rank-k GEMM on every device, accumulate into C — with
+real dependency edges between them.  ``core.summa`` realises that
+formulation *implicitly* through XLA's scheduler; this module realises it
+*explicitly*, so the schedule can be simulated, visualised, and tuned
+without ever touching a device.
+
+Two builders:
+
+* :func:`from_plan` — materializes a ``core.plan.MatmulPlan``: one task
+  group per live K panel, per-task FLOPs from the plan's per-device
+  liveness / BlockCSR column maps (``local_impl="bsmm"``), per-task bytes
+  from the same broadcast-as-allreduce model ``plan.PlanCost`` uses.
+* :func:`from_tilings` — the paper's nonuniform-block experiment: logical
+  blocks are cyclically embedded on a ``p_row x p_col`` grid
+  (``core.blocking.cyclic_owner``) and per-task costs follow the actual
+  block extents, so per-device load imbalance is visible per iteration.
+
+The multiple-issue lookahead window ``I`` (paper Eq. 1) is encoded as
+*dependency edges*: the broadcasts of iteration ``t`` depend on the
+accumulate of iteration ``t - I`` on every device of their broadcast
+group — at most ``I`` iterations are in flight per device, exactly the
+in-flight-iteration cap of the paper's task scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+__all__ = [
+    "Task",
+    "TaskGraph",
+    "from_plan",
+    "from_tilings",
+    "abstract_summa_config",
+    "eq1_lookahead",
+]
+
+#: broadcast-as-allreduce moves ~2x the panel bytes of a tree broadcast
+#: (same factor as ``core.plan._comm_model``).
+BCAST_FACTOR = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One schedulable unit.  Costs are abstract (FLOPs / bytes); the
+    simulator converts them to time through a ``MachineModel``."""
+
+    tid: int
+    kind: str  # "bcast_a" | "bcast_b" | "gather_a" | "gather_b" | "gemm" | "accum"
+    step: int  # schedule position of the iteration (-1: not per-iteration)
+    devices: tuple[int, ...]  # flat device ids whose resource this occupies
+    resource: str  # "comm" | "compute"
+    flops: float = 0.0
+    bytes: float = 0.0
+
+
+@dataclasses.dataclass
+class TaskGraph:
+    """An explicit task DAG over a ``p_row x p_col`` device grid.
+
+    ``deps[tid]`` lists the task ids that must finish before ``tid``
+    starts.  Tasks are stored in a topological order (builders emit them
+    iteration by iteration), which the simulator relies on.
+    """
+
+    p_row: int
+    p_col: int
+    n_steps: int
+    lookahead: int
+    tasks: list[Task]
+    deps: list[tuple[int, ...]]
+    meta: dict
+
+    @property
+    def n_devices(self) -> int:
+        return self.p_row * self.p_col
+
+    def device(self, i: int, j: int) -> int:
+        return i * self.p_col + j
+
+    def counts(self) -> dict:
+        out: dict[str, int] = {}
+        for t in self.tasks:
+            out[t.kind] = out.get(t.kind, 0) + 1
+        return out
+
+    def total_flops(self) -> float:
+        return float(sum(t.flops for t in self.tasks))
+
+    def total_bytes(self) -> float:
+        return float(sum(t.bytes for t in self.tasks))
+
+    def validate(self) -> None:
+        """Cheap structural invariants (used by tests)."""
+        for t, ds in zip(self.tasks, self.deps):
+            for d in ds:
+                if not 0 <= d < t.tid:
+                    raise ValueError(
+                        f"task {t.tid} depends on {d}: not topological"
+                    )
+
+
+class _AbstractMesh:
+    """Duck-typed stand-in for ``jax.sharding.Mesh`` carrying only the
+    axis-size table — enough for planning and simulation (``SummaConfig``
+    touches nothing else until execution)."""
+
+    def __init__(self, shape: dict):
+        self.shape = dict(shape)
+
+    @property
+    def empty(self) -> bool:
+        return False
+
+    def __repr__(self) -> str:  # keep plan reprs readable
+        return f"AbstractMesh({self.shape})"
+
+
+def abstract_summa_config(p_row: int, p_col: int, **kwargs):
+    """A ``SummaConfig`` over a virtual ``p_row x p_col`` grid.
+
+    Lets the planner + simulator study grids far larger than the local
+    device count (the paper's thousands-of-processes experiments) —
+    such configs must never reach ``execute_plan``.
+    """
+    from repro.core.summa import SummaConfig
+
+    mesh = _AbstractMesh({"data": p_row, "model": p_col})
+    kwargs.setdefault("row_axis", "data")
+    kwargs.setdefault("col_axis", "model")
+    return SummaConfig(mesh=mesh, **kwargs)  # type: ignore[arg-type]
+
+
+# ---------------------------------------------------------------------------
+# shared emission machinery
+# ---------------------------------------------------------------------------
+
+
+class _Builder:
+    def __init__(self, p_row: int, p_col: int):
+        self.p_row = p_row
+        self.p_col = p_col
+        self.tasks: list[Task] = []
+        self.deps: list[tuple[int, ...]] = []
+
+    def dev(self, i: int, j: int) -> int:
+        return i * self.p_col + j
+
+    def add(
+        self,
+        kind: str,
+        step: int,
+        devices: Iterable[int],
+        resource: str,
+        deps: Iterable[int] = (),
+        flops: float = 0.0,
+        bytes: float = 0.0,
+    ) -> int:
+        tid = len(self.tasks)
+        self.tasks.append(
+            Task(
+                tid=tid, kind=kind, step=step, devices=tuple(devices),
+                resource=resource, flops=float(flops), bytes=float(bytes),
+            )
+        )
+        self.deps.append(tuple(deps))
+        return tid
+
+    def graph(self, n_steps: int, lookahead: int, meta: dict) -> TaskGraph:
+        return TaskGraph(
+            p_row=self.p_row, p_col=self.p_col, n_steps=n_steps,
+            lookahead=lookahead, tasks=self.tasks, deps=self.deps, meta=meta,
+        )
+
+
+def _emit_pipeline(
+    b: _Builder,
+    *,
+    n_steps: int,
+    lookahead: int,
+    a_bytes,  # (step, grid_row) -> bytes of the A-panel broadcast (0: skip)
+    b_bytes,  # (step, grid_col) -> bytes of the B-panel broadcast (0: skip)
+    gemm_flops,  # (step, i, j) -> rank-k update FLOPs (0: dead, no task)
+    accum_flops,  # (i, j) -> accumulate FLOPs per iteration
+) -> None:
+    """Emit the multiple-issue broadcast/gemm/accumulate pipeline.
+
+    Window semantics: iteration ``t``'s broadcasts depend on the
+    accumulates of iteration ``t - lookahead`` of every device in the
+    broadcast group, capping in-flight iterations per device at
+    ``lookahead`` (paper Eq. 1).
+    """
+    p_row, p_col = b.p_row, b.p_col
+    # last accumulate (or gemm) tid per device, per past step
+    accum_hist: list[dict[int, int]] = []
+    prev_accum: dict[int, int] = {}
+    for t in range(n_steps):
+        window: dict[int, int] = (
+            accum_hist[t - lookahead] if t >= lookahead else {}
+        )
+        a_tids: dict[int, int] = {}
+        for i in range(p_row):
+            bytes_ = a_bytes(t, i)
+            if bytes_ <= 0:
+                continue
+            group = [b.dev(i, j) for j in range(p_col)]
+            deps = [window[d] for d in group if d in window]
+            a_tids[i] = b.add(
+                "bcast_a", t, group, "comm", deps=deps, bytes=bytes_
+            )
+        b_tids: dict[int, int] = {}
+        for j in range(p_col):
+            bytes_ = b_bytes(t, j)
+            if bytes_ <= 0:
+                continue
+            group = [b.dev(i, j) for i in range(p_row)]
+            deps = [window[d] for d in group if d in window]
+            b_tids[j] = b.add(
+                "bcast_b", t, group, "comm", deps=deps, bytes=bytes_
+            )
+        step_accum: dict[int, int] = {}
+        for i in range(p_row):
+            for j in range(p_col):
+                d = b.dev(i, j)
+                flops = gemm_flops(t, i, j)
+                if flops <= 0:
+                    # dead iteration for this device: nothing occupies it,
+                    # but the window still advances (carry previous task).
+                    if d in prev_accum:
+                        step_accum[d] = prev_accum[d]
+                    continue
+                deps = []
+                if i in a_tids:
+                    deps.append(a_tids[i])
+                if j in b_tids:
+                    deps.append(b_tids[j])
+                if d in prev_accum:
+                    deps.append(prev_accum[d])  # C-tile RAW dependency
+                g = b.add("gemm", t, (d,), "compute", deps=deps, flops=flops)
+                step_accum[d] = b.add(
+                    "accum", t, (d,), "compute", deps=(g,),
+                    flops=accum_flops(i, j),
+                )
+        prev_accum = {**prev_accum, **step_accum}
+        accum_hist.append(dict(prev_accum))
+
+
+# ---------------------------------------------------------------------------
+# builder 1: from a MatmulPlan
+# ---------------------------------------------------------------------------
+
+
+def _bsmm_step_flops(plan) -> np.ndarray:
+    """(p_row, p_col, L) executed FLOPs per live-panel position from the
+    plan's per-device BlockCSR column maps (``local_impl="bsmm"``)."""
+    cols = plan.local_cols  # (p_row, p_col, mb_loc, S), -1 pad
+    live = len(plan.live_panels)
+    bm, bk, _ = plan.local_block
+    n_loc = plan.n_pad // plan.p_col
+    # count of local row blocks touching each gathered panel position
+    cnt = (cols[..., None] == np.arange(live)).any(axis=3).sum(axis=2)
+    return cnt.astype(np.float64) * (2.0 * bm * bk * n_loc)
+
+
+def from_plan(
+    plan,
+    *,
+    strategy: str | None = None,
+    lookahead: int | None = None,
+) -> TaskGraph:
+    """Materialize a ``MatmulPlan`` into the explicit task DAG it implies.
+
+    ``strategy`` defaults to the plan's own: the broadcast pipeline for
+    ``procedural`` (window forced to 1) / ``taskbased`` (window = the
+    plan's resolved lookahead), or the bulk-gather graph for
+    ``allgather``.  Masked plans always build the pipeline over their
+    *live* panels, with per-device FLOPs from the BlockCSR maps when the
+    plan runs the BSMM kernel.
+    """
+    p_row, p_col = plan.p_row, plan.p_col
+    itemsize = plan.itemsize
+    m_loc = plan.m_pad // p_row
+    n_loc = plan.n_pad // p_col
+    kb = plan.kb_width
+    steps = list(plan.live_panels)
+    n_steps = len(steps)
+    strategy = strategy or (
+        plan.cfg.strategy if plan.local_impl == "dense" else "taskbased"
+    )
+    b = _Builder(p_row, p_col)
+    meta = {
+        "source": "plan",
+        "strategy": strategy,
+        "shape": [plan.m, plan.k, plan.n],
+        "grid": [p_row, p_col],
+        "local_impl": plan.local_impl,
+    }
+
+    if strategy == "allgather":
+        if plan.local_impl != "dense":
+            raise ValueError("allgather graph is dense-only (sparsity-blind)")
+        ga: dict[int, int] = {}
+        gb: dict[int, int] = {}
+        if p_col > 1:
+            bytes_a = itemsize * m_loc * plan.k_pad * (p_col - 1) / p_col
+            for i in range(p_row):
+                ga[i] = b.add(
+                    "gather_a", -1, [b.dev(i, j) for j in range(p_col)],
+                    "comm", bytes=bytes_a,
+                )
+        if p_row > 1:
+            bytes_b = itemsize * plan.k_pad * n_loc * (p_row - 1) / p_row
+            for j in range(p_col):
+                gb[j] = b.add(
+                    "gather_b", -1, [b.dev(i, j) for i in range(p_row)],
+                    "comm", bytes=bytes_b,
+                )
+        flops = 2.0 * m_loc * plan.k_pad * n_loc
+        for i in range(p_row):
+            for j in range(p_col):
+                deps = [t for t in (ga.get(i), gb.get(j)) if t is not None]
+                g = b.add(
+                    "gemm", 0, (b.dev(i, j),), "compute", deps=deps,
+                    flops=flops,
+                )
+                b.add(
+                    "accum", 0, (b.dev(i, j),), "compute", deps=(g,),
+                    flops=float(m_loc * n_loc),
+                )
+        graph = b.graph(1, n_steps or 1, meta)
+        graph.meta["lookahead"] = graph.lookahead
+        return graph
+
+    from repro.core.summa import resolve_multi_issue
+
+    if strategy == "procedural":
+        window = 1
+    else:
+        window = lookahead if lookahead is not None else plan.resolve_lookahead()
+    # re-clamp: masked plans schedule only their live panels
+    window = resolve_multi_issue(p_row, p_col, n_steps, window)
+    meta["lookahead"] = window
+
+    if plan.local_impl == "bsmm":
+        step_flops = _bsmm_step_flops(plan)  # (p_row, p_col, L)
+
+        def gemm_flops(t, i, j):
+            return float(step_flops[i, j, t])
+    else:
+        # dense — and "masked", whose DAG executor runs dense panel dots
+        # on masked operands: a device whose C tile is dead for this
+        # panel still executes it.
+        dense_panel = 2.0 * m_loc * kb * n_loc
+
+        def gemm_flops(t, i, j):
+            return dense_panel
+
+    a_panel_bytes = BCAST_FACTOR * m_loc * kb * itemsize if p_col > 1 else 0.0
+    b_panel_bytes = BCAST_FACTOR * kb * n_loc * itemsize if p_row > 1 else 0.0
+    _emit_pipeline(
+        b,
+        n_steps=n_steps,
+        lookahead=window,
+        a_bytes=lambda t, i: a_panel_bytes,
+        b_bytes=lambda t, j: b_panel_bytes,
+        gemm_flops=gemm_flops,
+        accum_flops=lambda i, j: float(m_loc * n_loc),
+    )
+    return b.graph(n_steps, window, meta)
+
+
+# ---------------------------------------------------------------------------
+# builder 2: from nonuniform tilings (the paper's §4 experiment)
+# ---------------------------------------------------------------------------
+
+
+def from_tilings(
+    p_row: int,
+    p_col: int,
+    row_tiling,
+    inner_tiling,
+    col_tiling,
+    *,
+    lookahead: int | None = None,
+    itemsize: int = 4,
+) -> TaskGraph:
+    """Fine-grained task DAG for a (possibly nonuniform) blocked matmul.
+
+    One SUMMA iteration per inner (K) logical block; its panel width is
+    that block's extent, so per-iteration costs are nonuniform exactly as
+    in the paper.  Row / column blocks embed cyclically on the grid
+    (``cyclic_owner``), giving each device its own M x N footprint — the
+    per-device load imbalance that multiple-issue must absorb.
+
+    ``lookahead=None`` resolves paper Eq. (1).
+    """
+    from repro.core.summa import resolve_multi_issue
+
+    rows = np.asarray(row_tiling.sizes, dtype=np.int64)
+    inner = np.asarray(inner_tiling.sizes, dtype=np.int64)
+    cols = np.asarray(col_tiling.sizes, dtype=np.int64)
+    n_steps = len(inner)
+    # cyclic embedding: block b of the row blocking lives on grid row b%p
+    rows_per = np.zeros(p_row, dtype=np.int64)
+    np.add.at(rows_per, np.arange(len(rows)) % p_row, rows)
+    cols_per = np.zeros(p_col, dtype=np.int64)
+    np.add.at(cols_per, np.arange(len(cols)) % p_col, cols)
+    window = resolve_multi_issue(p_row, p_col, n_steps, lookahead)
+
+    b = _Builder(p_row, p_col)
+    _emit_pipeline(
+        b,
+        n_steps=n_steps,
+        lookahead=window,
+        a_bytes=lambda t, i: (
+            BCAST_FACTOR * float(rows_per[i] * inner[t]) * itemsize
+            if p_col > 1 else 0.0
+        ),
+        b_bytes=lambda t, j: (
+            BCAST_FACTOR * float(inner[t] * cols_per[j]) * itemsize
+            if p_row > 1 else 0.0
+        ),
+        gemm_flops=lambda t, i, j: 2.0 * float(
+            rows_per[i] * inner[t] * cols_per[j]
+        ),
+        accum_flops=lambda i, j: float(rows_per[i] * cols_per[j]),
+    )
+    imbalance = float(
+        (rows_per.max() * cols_per.max()) / max(rows_per.min() * cols_per.min(), 1)
+    )
+    return b.graph(
+        n_steps,
+        window,
+        {
+            "source": "tilings",
+            "strategy": "taskbased" if window > 1 else "procedural",
+            "shape": [int(rows.sum()), int(inner.sum()), int(cols.sum())],
+            "grid": [p_row, p_col],
+            "lookahead": window,
+            "static_imbalance": imbalance,
+            "uniform": bool(
+                row_tiling.is_uniform
+                and inner_tiling.is_uniform
+                and col_tiling.is_uniform
+            ),
+        },
+    )
+
+
+def eq1_lookahead(p_row: int, p_col: int, k_steps: int) -> int:
+    """Paper Eq. (1) clamped to the schedule length (convenience)."""
+    from repro.core.summa import resolve_multi_issue
+
+    return resolve_multi_issue(p_row, p_col, k_steps)

@@ -1,0 +1,180 @@
+"""Schedule autotuner: search lookahead x k_blocks x strategy by simulation.
+
+``core.plan.PlanCost`` ranks strategies by modeled *bytes* — a static
+tie-break that knows nothing about overlap, pipelining, or imbalance.
+The tuner replaces it: every candidate schedule is materialized as an
+explicit task DAG (``taskgraph``) and run through the discrete-event
+simulator; the winner is the schedule with the smallest simulated
+makespan.  Because the static cost-model choice is always one of the
+candidates, the tuned schedule is **never worse** (in simulated
+makespan) than the static pick.
+
+Entry points:
+
+* :func:`tune_plan` — returns a new ``MatmulPlan`` whose config carries
+  the winning strategy / ``k_blocks`` and whose ``lookahead`` field holds
+  the winning window (``core.summa._exec_taskbased`` honors it).  The
+  search record is attached as ``plan.tuned``.
+* :func:`ring_makespan` — closed-form pipeline estimate for the ring
+  collective matmul (``dist.collective_matmul.allgather_matmul``), so
+  ``project(strategy="auto")`` can route between the ring and the tuned
+  SUMMA schedule on simulated time instead of bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.sched.simulator import (
+    DEFAULT_MACHINE,
+    MachineModel,
+    simulate,
+)
+from repro.sched.taskgraph import eq1_lookahead, from_plan
+
+__all__ = ["tune_plan", "ring_makespan", "lookahead_candidates"]
+
+#: strategies the tuner may select for plan execution
+TUNABLE_STRATEGIES = ("procedural", "taskbased", "allgather")
+
+
+def lookahead_candidates(p_row: int, p_col: int, k_steps: int) -> list[int]:
+    """Candidate multiple-issue windows: serial, minimal overlap, Eq. (1)
+    and its half, and the fully-unrolled I = K endpoint."""
+    eq1 = eq1_lookahead(p_row, p_col, k_steps)
+    cap = max(k_steps, 1)
+    cands = {1, 2, max(1, eq1 // 2), eq1, cap}
+    return sorted(c for c in cands if 1 <= c <= cap)
+
+
+def _k_block_candidates(cfg, k_steps: int) -> list[int | None]:
+    """``k_blocks`` (over-decomposition) candidates: the plan's own value
+    plus the classic grid counts and 2x / 4x over-decompositions."""
+    lcm = math.lcm(cfg.p_row, cfg.p_col)
+    cands: list[int | None] = [cfg.k_blocks]
+    for kb in (max(cfg.p_row, cfg.p_col), lcm, 2 * lcm, 4 * lcm):
+        if kb not in cands:
+            cands.append(kb)
+    return cands
+
+
+def _sim_summary(sim) -> dict:
+    return {
+        "makespan_s": sim.makespan_s,
+        "imbalance_ratio": sim.imbalance_ratio,
+        "efficiency": sim.efficiency,
+    }
+
+
+def tune_plan(
+    plan,
+    *,
+    machine: MachineModel = DEFAULT_MACHINE,
+    strategies: tuple[str, ...] = TUNABLE_STRATEGIES,
+):
+    """Return a tuned copy of ``plan`` (same logical product, best
+    simulated schedule).
+
+    Dense plans search strategy x k_blocks x lookahead (re-planning per
+    ``k_blocks`` so padding effects are priced in).  Masked plans always
+    execute the planned broadcast schedule, so only the window is tuned.
+    The returned plan's ``tuned`` dict records the winner and the static
+    cost-model baseline; callers must re-pad operands to the tuned plan's
+    ``padded_shapes`` (``core.api.DistributedMatmul`` does).
+    """
+    from repro.core.plan import plan_matmul
+
+    base_cfg = plan.cfg
+    if plan.local_impl == "dense":
+        static_strategy = plan.cost.best_strategy(("taskbased", "allgather"))
+    else:
+        # masked plans always execute the planned broadcast schedule; the
+        # static baseline is that schedule at the Eq.-(1) window.
+        static_strategy = "taskbased"
+    static_sim = simulate(from_plan(plan, strategy=static_strategy), machine)
+
+    best = None  # (makespan, order, plan_variant, lookahead, sim)
+    n_cands = 0
+
+    def consider(cand_plan, strategy, lookahead):
+        nonlocal best, n_cands
+        graph = from_plan(cand_plan, strategy=strategy, lookahead=lookahead)
+        sim = simulate(graph, machine)
+        n_cands += 1
+        key = (sim.makespan_s, n_cands)
+        if best is None or key < (best[0], best[1]):
+            best = (sim.makespan_s, n_cands, cand_plan, strategy,
+                    graph.lookahead, sim)
+
+    if plan.local_impl != "dense":
+        for la in lookahead_candidates(plan.p_row, plan.p_col,
+                                       len(plan.live_panels)):
+            consider(plan, "taskbased", la)
+    else:
+        for kb in _k_block_candidates(base_cfg, plan.k_steps):
+            if kb == base_cfg.k_blocks:
+                variant = plan
+            else:
+                try:
+                    variant = plan_matmul(
+                        plan.m, plan.k, plan.n,
+                        dataclasses.replace(base_cfg, k_blocks=kb),
+                        itemsize=plan.itemsize,
+                    )
+                except ValueError:
+                    continue  # k_blocks incompatible with this K / grid
+            las = lookahead_candidates(
+                variant.p_row, variant.p_col, variant.k_steps
+            )
+            for strategy in strategies:
+                if strategy == "procedural":
+                    consider(variant, strategy, 1)
+                elif strategy == "allgather":
+                    consider(variant, strategy, None)
+                else:
+                    for la in las:
+                        consider(variant, strategy, la)
+
+    _, _, win_plan, win_strategy, win_la, win_sim = best
+    tuned_cfg = dataclasses.replace(win_plan.cfg, strategy=win_strategy)
+    info = {
+        "strategy": win_strategy,
+        "k_blocks": win_plan.k_steps,
+        "lookahead": int(win_la),
+        **_sim_summary(win_sim),
+        "static_strategy": static_strategy,
+        "static_makespan_s": static_sim.makespan_s,
+        "speedup_vs_static": (
+            static_sim.makespan_s / win_sim.makespan_s
+            if win_sim.makespan_s > 0 else 1.0
+        ),
+        "n_candidates": n_cands,
+        "machine": machine.name,
+    }
+    return dataclasses.replace(
+        win_plan, cfg=tuned_cfg, lookahead=int(win_la), tuned=info
+    )
+
+
+def ring_makespan(
+    plan,
+    machine: MachineModel = DEFAULT_MACHINE,
+    *,
+    lookahead: int = 2,
+) -> float:
+    """Pipeline estimate for the ring collective matmul over ``p_col``.
+
+    Each of the ``p`` activation chunks takes one hop per step while the
+    chunk in hand multiplies against the local weight columns; with
+    ``lookahead`` hops in flight the steady state is bound by the slower
+    of the two streams (cf. ``allgather_matmul``'s prefetch pipeline).
+    """
+    p = plan.p_col
+    m_loc = plan.m_pad // plan.p_row
+    n_loc = plan.n_pad // plan.p_col
+    gemm = machine.compute_time(2.0 * (m_loc / p) * plan.k_pad * n_loc)
+    if p <= 1:
+        return gemm
+    hop = machine.comm_time((m_loc / p) * plan.k_pad * plan.itemsize)
+    fill = hop * max(1, min(lookahead, p) - 1)
+    return fill + max((p - 1) * hop, (p - 1) * gemm) + gemm

@@ -55,6 +55,9 @@ def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
     to M = B*S rows, decode to M = B — so the jitted prefill/decode paths
     hit ``DistributedMatmul``'s plan cache instead of re-deriving the
     schedule (numpy panel liveness, CSR maps, cost model) inside tracing.
+    With ``matmul_strategy="auto"`` each plan is additionally *tuned*
+    (repro.sched.tuner): the simulator search over lookahead x k_blocks x
+    strategy runs here, once per shape, instead of inside the trace.
     Returns the warmed plans; no-op (empty) on the plain-einsum path.
     """
     if not ctx.has_mesh or ctx.matmul_strategy == "xla" or ctx.pure_dp:
@@ -64,12 +67,15 @@ def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
     if cfg.moe is not None and cfg.moe.num_shared_experts:
         ffs.append(cfg.moe.d_ff * cfg.moe.num_shared_experts)
     itemsize = jnp.dtype(cfg.dtype).itemsize
+    tune = ctx.matmul_strategy == "auto"
     plans = []
     for m in (batch * prompt_len, batch):
         for f in ffs:
             for k_in, n_out in ((d, f), (f, d)):
                 plans.append(
-                    ctx.plan_projection(m, k_in, n_out, itemsize=itemsize)
+                    ctx.plan_projection(
+                        m, k_in, n_out, itemsize=itemsize, tune=tune
+                    )
                 )
     return [p for p in plans if p is not None]
 

@@ -1,0 +1,271 @@
+"""repro.sched: task-graph structure, discrete-event simulation invariants,
+the paper's multi-issue imbalance-absorption result, and the autotuner's
+never-worse-than-static guarantee."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.blocking import nonuniform_tiling, uniform_tiling
+from repro.core.plan import plan_matmul
+from repro.sched import (
+    DEFAULT_MACHINE,
+    MachineModel,
+    abstract_summa_config,
+    eq1_lookahead,
+    from_plan,
+    from_tilings,
+    lookahead_candidates,
+    ring_makespan,
+    simulate,
+    simulate_plan,
+    tune_plan,
+)
+
+
+def _nonuniform_tilings(extent=2048, blocks=64, seed=1):
+    return [nonuniform_tiling(extent, blocks, seed=seed + s) for s in range(3)]
+
+
+# ---------------------------------------------------------------------------
+# task graph structure
+# ---------------------------------------------------------------------------
+
+
+def test_taskgraph_structure_and_window_edges():
+    graph = from_tilings(2, 4, *_nonuniform_tilings(512, 8), lookahead=2)
+    graph.validate()
+    counts = graph.counts()
+    # 8 iterations x (2 row-group A broadcasts + 4 col-group B broadcasts)
+    assert counts["bcast_a"] == 8 * 2
+    assert counts["bcast_b"] == 8 * 4
+    # every device computes every iteration (dense nonuniform product)
+    assert counts["gemm"] == counts["accum"] == 8 * 2 * 4
+    by_tid = {t.tid: t for t in graph.tasks}
+    for task, deps in zip(graph.tasks, graph.deps):
+        if task.kind == "gemm":
+            kinds = {by_tid[d].kind for d in deps}
+            assert "bcast_a" in kinds and "bcast_b" in kinds
+        if task.kind.startswith("bcast") and task.step >= graph.lookahead:
+            # the multiple-issue window: iteration t's broadcast waits on
+            # the accumulate of iteration t - I (per paper Eq. 1)
+            assert any(
+                by_tid[d].kind == "accum"
+                and by_tid[d].step == task.step - graph.lookahead
+                for d in deps
+            )
+        # broadcasts before the window fills have no accum dependencies
+        if task.kind.startswith("bcast") and task.step < graph.lookahead:
+            assert not any(by_tid[d].kind == "accum" for d in deps)
+
+
+def test_taskgraph_from_plan_costs_match_plan():
+    cfg = abstract_summa_config(4, 4, strategy="taskbased")
+    plan = plan_matmul(1024, 1024, 1024, cfg)
+    graph = from_plan(plan)
+    graph.validate()
+    gemm_flops = sum(t.flops for t in graph.tasks if t.kind == "gemm")
+    assert gemm_flops == pytest.approx(plan.cost.flops_dense)
+    # per-panel broadcast bytes match the PlanCost broadcast model in total
+    comm = sum(t.bytes * len(t.devices) for t in graph.tasks
+               if t.kind.startswith("bcast")) / graph.n_devices
+    assert comm == pytest.approx(plan.cost.comm_bytes["taskbased"])
+
+
+def test_taskgraph_from_masked_plan_prunes_and_uses_csr():
+    from repro.core.sparsity import banded_block_mask
+
+    cfg = abstract_summa_config(4, 4, strategy="taskbased", local_matmul="pallas")
+    am = banded_block_mask(16, 16, 1)
+    bm = banded_block_mask(16, 16, 1)
+    plan = plan_matmul(512, 512, 512, cfg, a_mask=am, b_mask=bm)
+    assert plan.local_impl == "bsmm"
+    graph = from_plan(plan)
+    graph.validate()
+    assert graph.n_steps == len(plan.live_panels)
+    # per-device FLOPs follow the BlockCSR maps: a banded mask on a
+    # multi-row grid gives devices different work per panel
+    per_dev = np.zeros(graph.n_devices)
+    for t in graph.tasks:
+        if t.kind == "gemm":
+            per_dev[t.devices[0]] += t.flops
+    assert per_dev.max() > per_dev.min()
+
+
+# ---------------------------------------------------------------------------
+# simulator invariants
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_serial_schedule_sums_everything():
+    """On a 1x1 grid there is no comm: makespan == total compute time."""
+    cfg = abstract_summa_config(1, 1, strategy="taskbased", k_blocks=4)
+    plan = plan_matmul(256, 256, 256, cfg)
+    sim = simulate_plan(plan)
+    assert sim.makespan_s == pytest.approx(float(sim.busy_compute_s.sum()))
+    assert sim.busy_comm_s.sum() == 0.0
+    assert sim.imbalance_ratio == 1.0
+
+
+def test_simulator_lookahead_monotone_and_comm_overlap():
+    tilings = _nonuniform_tilings()
+    machine = DEFAULT_MACHINE
+    spans = {}
+    for la in (1, 2, 4, 8):
+        sim = simulate(from_tilings(8, 8, *tilings, lookahead=la), machine)
+        spans[la] = sim.makespan_s
+    # a deeper window can only help (more overlap freedom)
+    assert spans[2] <= spans[1]
+    assert spans[4] <= spans[2]
+    assert spans[8] <= spans[4]
+    # and with any window, makespan is at least the compute lower bound
+    sim8 = simulate(from_tilings(8, 8, *tilings, lookahead=8), machine)
+    assert sim8.makespan_s >= sim8.busy_compute_s.max()
+
+
+def test_multi_issue_absorbs_nonuniform_imbalance():
+    """The acceptance bar: on the EXPERIMENTS.md §Simulated-scaling
+    workload (16x16 grid, N=4096, 64 nonuniform blocks/dim, seeds 1/2/3),
+    lookahead I = Eq. (1) achieves >= 1.3x lower simulated makespan than
+    serial issue I = 1 — and the same holds on a smaller 8x8 grid."""
+    accept = _nonuniform_tilings(4096, 64)
+    a1 = simulate(from_tilings(16, 16, *accept, lookahead=1))
+    aeq = simulate(from_tilings(16, 16, *accept))
+    assert aeq.graph_meta["lookahead"] == eq1_lookahead(16, 16, 64)
+    assert a1.makespan_s / aeq.makespan_s >= 1.3
+
+    tilings = _nonuniform_tilings(2048, 64)
+    s1 = simulate(from_tilings(8, 8, *tilings, lookahead=1))
+    seq = simulate(from_tilings(8, 8, *tilings))  # Eq. (1) window
+    assert seq.graph_meta["lookahead"] == eq1_lookahead(8, 8, 64)
+    assert s1.makespan_s / seq.makespan_s >= 1.3
+    # multi-issue recovers most of the ground lost to nonuniform blocks:
+    # closer to the uniform schedule than serial issue is, by 2x or more
+    uni = [uniform_tiling(2048, 32) for _ in range(3)]
+    u = simulate(from_tilings(8, 8, *uni))
+    gap_serial = s1.makespan_s / u.makespan_s
+    gap_multi = seq.makespan_s / u.makespan_s
+    assert gap_multi < gap_serial / 2 + 0.5
+
+
+def test_chrome_trace_export(tmp_path):
+    tilings = _nonuniform_tilings(512, 8)
+    sim = simulate(from_tilings(2, 2, *tilings), trace=True)
+    path = tmp_path / "trace.json"
+    sim.write_chrome_trace(str(path))
+    trace = json.loads(path.read_text())
+    events = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert events, "no duration events in trace"
+    end = max(e["ts"] + e["dur"] for e in events)
+    assert end <= sim.makespan_s * 1e6 + 1.0
+    assert {e["pid"] for e in events} == {0, 1, 2, 3}
+    # untraced simulation refuses to export
+    with pytest.raises(ValueError):
+        simulate(from_tilings(2, 2, *tilings)).chrome_trace()
+
+
+# ---------------------------------------------------------------------------
+# tuner
+# ---------------------------------------------------------------------------
+
+
+def test_tuner_never_worse_than_static_pick():
+    for pr, pc, n in ((2, 2, 512), (4, 4, 1024), (8, 4, 2048)):
+        cfg = abstract_summa_config(pr, pc, strategy="taskbased")
+        tuned = tune_plan(plan_matmul(n, n, n, cfg))
+        t = tuned.tuned
+        assert t["makespan_s"] <= t["static_makespan_s"] * (1 + 1e-9), (
+            pr, pc, n, t,
+        )
+        assert t["strategy"] in ("procedural", "taskbased", "allgather")
+        assert tuned.lookahead == t["lookahead"]
+        assert tuned.resolve_lookahead() == min(t["lookahead"], tuned.k_steps)
+
+
+def test_tuner_prefers_overlap_when_comm_dominates():
+    """With an artificially slow wire, the bulk allgather (one latency,
+    same bytes as the 2x-cost broadcasts halved) should win; with an
+    artificially slow MXU every strategy ties on compute and the tuner
+    must still return a valid schedule."""
+    cfg = abstract_summa_config(4, 4, strategy="procedural")
+    plan = plan_matmul(1024, 1024, 1024, cfg)
+    slow_wire = MachineModel(flops_per_s=1e15, bytes_per_s=1e8, name="wire")
+    t = tune_plan(plan, machine=slow_wire).tuned
+    assert t["strategy"] == "allgather"
+    slow_mxu = MachineModel(flops_per_s=1e9, bytes_per_s=1e12, name="mxu")
+    t2 = tune_plan(plan, machine=slow_mxu).tuned
+    assert t2["makespan_s"] <= t2["static_makespan_s"] * (1 + 1e-9)
+
+
+def test_tuned_masked_plan_keeps_schedule_and_tunes_window():
+    from repro.core.sparsity import random_block_mask
+
+    cfg = abstract_summa_config(2, 2, strategy="taskbased")
+    am = random_block_mask(8, 8, 0.4, seed=1)
+    bm = random_block_mask(8, 8, 0.4, seed=2)
+    plan = plan_matmul(256, 256, 256, cfg, a_mask=am, b_mask=bm)
+    tuned = tune_plan(plan)
+    # masked plans keep their liveness/pruning; only the window is tuned
+    assert tuned.live_panels == plan.live_panels
+    assert tuned.local_impl == plan.local_impl
+    assert tuned.tuned["lookahead"] in lookahead_candidates(
+        2, 2, len(plan.live_panels)
+    )
+
+
+def test_ring_makespan_scales_with_grid():
+    cfg1 = abstract_summa_config(1, 4, strategy="taskbased")
+    cfg2 = abstract_summa_config(1, 8, strategy="taskbased")
+    p1 = plan_matmul(512, 512, 512, cfg1)
+    p2 = plan_matmul(512, 512, 512, cfg2)
+    assert ring_makespan(p1) > 0
+    # same product split over more devices: less compute per device
+    assert (
+        simulate_plan(p2).busy_compute_s.max()
+        < simulate_plan(p1).busy_compute_s.max()
+    )
+
+
+def test_tuned_plan_executes_correctly():
+    """End-to-end: a tuner-modified plan (strategy/k_blocks/lookahead all
+    potentially different) still computes the right product."""
+    import jax.numpy as jnp
+
+    from repro.core import DistributedMatmul, reference_matmul
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(48, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    mm = DistributedMatmul(mesh, strategy="taskbased", k_blocks=4)
+    got = np.asarray(mm(a, b, tune=True))
+    want = np.asarray(reference_matmul(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+    plan = mm.plan(48, 64, 32, tune=True)
+    assert plan.tuned is not None
+    assert plan.tuned["makespan_s"] <= plan.tuned["static_makespan_s"] * (
+        1 + 1e-9
+    )
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_sched_cli_smoke(tmp_path, capsys):
+    from repro.sched.__main__ import main
+
+    trace = tmp_path / "trace.json"
+    out = tmp_path / "sim.json"
+    main([
+        "--grid", "2", "2", "--extent", "256", "--blocks", "4",
+        "--nonuniform", "--compare",
+        "--trace", str(trace), "--json", str(out),
+    ])
+    captured = capsys.readouterr().out
+    assert "multi_issue_speedup" in captured
+    payload = json.loads(out.read_text())
+    assert payload["sim"]["makespan_s"] > 0
+    assert json.loads(trace.read_text())["traceEvents"]

@@ -19,6 +19,36 @@ def test_eq1_multi_issue_limit():
     assert multi_issue_limit(16, 16, 8) == 8  # P >= K -> K
     assert multi_issue_limit(16, 8, 100) == 8  # min(Prow, Pcol)
     assert multi_issue_limit(4, 12, 100) == 4
+    # degenerate grids/schedules still give a usable (>= 1) window
+    assert multi_issue_limit(1, 1, 8) == 2  # 1x1 grid
+    assert multi_issue_limit(1, 1, 1) == 2
+    assert multi_issue_limit(4, 4, 1) == 1  # P >= K -> K, even K=1
+    assert multi_issue_limit(4, 4, 0) == 0  # raw Eq. 1; resolve_ clamps
+
+
+def test_resolve_lookahead_edge_cases():
+    """SummaConfig.resolve_lookahead: always in [1, max(k_steps, 1)]."""
+    from repro.sched import abstract_summa_config
+
+    cfg = abstract_summa_config(4, 4)
+    assert cfg.resolve_lookahead(0) == 1  # empty schedule -> still valid
+    assert cfg.resolve_lookahead(1) == 1
+    assert cfg.resolve_lookahead(8) == 4  # Eq. (1): min(p_row, p_col)...
+    assert abstract_summa_config(1, 1).resolve_lookahead(8) == 2
+    assert abstract_summa_config(1, 1).resolve_lookahead(1) == 1
+    # explicit lookahead larger than the panel count must clamp
+    assert abstract_summa_config(4, 4, lookahead=64).resolve_lookahead(8) == 8
+    assert abstract_summa_config(4, 4, lookahead=64).resolve_lookahead(0) == 1
+    assert abstract_summa_config(4, 4, lookahead=0).resolve_lookahead(8) == 1
+    # the per-plan override (set by the tuner) wins, with the same clamp
+    from repro.core.plan import plan_matmul
+    import dataclasses
+
+    plan = plan_matmul(64, 64, 64, abstract_summa_config(4, 4, k_blocks=4))
+    assert plan.resolve_lookahead() == plan.cfg.resolve_lookahead(4)
+    tuned = dataclasses.replace(plan, lookahead=99)
+    assert tuned.resolve_lookahead() == 4  # clamped to k_steps
+    assert dataclasses.replace(plan, lookahead=2).resolve_lookahead() == 2
 
 
 @pytest.mark.parametrize("strategy", ["procedural", "taskbased", "allgather"])
@@ -130,3 +160,33 @@ print("SUBPROC_BS_OK")
 def test_blocksparse_skips_dead_panels(subproc):
     out = subproc(BLOCKSPARSE_COMM_CODE, devices=4)
     assert "SUBPROC_BS_OK" in out
+
+
+LOOKAHEAD_DEGRADE_CODE = r"""
+import numpy as np, jax.numpy as jnp
+from repro.core import DistributedMatmul
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+b = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
+proc = DistributedMatmul(mesh, strategy="procedural", k_blocks=8)
+task1 = DistributedMatmul(mesh, strategy="taskbased", k_blocks=8, lookahead=1)
+o_proc = np.asarray(proc(a, b))
+o_task = np.asarray(task1(a, b))
+# lookahead=1 is procedural SUMMA: same panel order, same accumulation
+# order, so the float results must agree BITWISE, not just approximately.
+assert np.array_equal(o_proc, o_task), np.abs(o_proc - o_task).max()
+# an over-large explicit lookahead clamps to k_steps (the allgather-like
+# fully-unrolled pipeline) and still matches within fp tolerance
+big = DistributedMatmul(mesh, strategy="taskbased", k_blocks=8, lookahead=999)
+assert np.abs(np.asarray(big(a, b)) - o_proc).max() < 1e-4
+print("SUBPROC_LOOKAHEAD_OK")
+"""
+
+
+def test_lookahead_one_degrades_to_procedural_exactly(subproc):
+    """Satellite of the sched PR: I=1 multiple-issue == the procedural
+    baseline bit-for-bit; explicit lookahead > k_steps clamps."""
+    out = subproc(LOOKAHEAD_DEGRADE_CODE, devices=4)
+    assert "SUBPROC_LOOKAHEAD_OK" in out
