@@ -1,6 +1,6 @@
 """Core: task-based SUMMA for block-sparse tensor computing (the paper)."""
 from repro.core.api import DistributedMatmul, NonuniformMatmul, pad_to_multiple
-from repro.core.plan import MatmulPlan, PlanCost, plan_matmul
+from repro.core.plan import MatmulPlan, PlanCost, mask_key, plan_matmul, rank_key
 from repro.core.blocking import (
     BucketedTiling,
     LoadStats,
@@ -14,18 +14,29 @@ from repro.core.blocking import (
 )
 from repro.core.sparsity import (
     BlockCSR,
+    BlockRankMap,
+    RankCSR,
     banded_block_mask,
     block_csr_from_mask,
+    block_rank_flops,
     decay_block_mask,
+    decay_rank_map,
     mask_matmul_flops,
     random_block_mask,
+    random_rank_map,
+    rank_csr_from_dense,
+    rank_matmul_flops,
+    synthesize_rank_csr,
 )
 from repro.core.summa import (
     SummaConfig,
     execute_plan,
+    execute_rank_plan,
     multi_issue_limit,
+    rank_operands,
     reference_blocksparse_matmul,
     reference_matmul,
+    reference_ranksparse_matmul,
     summa_25d_matmul,
     summa_blocksparse_matmul,
     summa_matmul,

@@ -21,7 +21,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import blocking as bk
 from repro.core import summa as sm
-from repro.core.plan import MatmulPlan, mask_key, plan_matmul
+from repro.core.plan import MatmulPlan, mask_key, plan_matmul, rank_key
+from repro.core.sparsity import BlockRankMap, RankCSR
 
 __all__ = ["DistributedMatmul", "pad_to_multiple", "NonuniformMatmul"]
 
@@ -107,25 +108,33 @@ class DistributedMatmul:
         *,
         a_mask: np.ndarray | None = None,
         b_mask: np.ndarray | None = None,
+        a_ranks: BlockRankMap | RankCSR | None = None,
         strategy: str | None = None,
         itemsize: int = 4,
         tune: bool = False,
     ) -> MatmulPlan:
         """The (cached) execution plan for a (M, K) x (K, N) product.
 
-        ``tune=True`` runs the schedule autotuner (repro.sched.tuner) over
-        the plan: the cached result carries the simulated-makespan-optimal
-        strategy / k_blocks / lookahead instead of the static config.
+        ``a_ranks`` (a ``BlockRankMap`` or ``RankCSR``) plans A as
+        block-rank-sparse: costs/schedule follow the per-block ranks.  The
+        cache key digests the *rank structure*, not factor values — two
+        ``RankCSR`` with the same ranks share a plan.  ``tune=True`` runs
+        the schedule autotuner (repro.sched.tuner) over the plan: the
+        cached result carries the simulated-makespan-optimal strategy /
+        k_blocks / lookahead instead of the static config.
         """
+        rank_payload = isinstance(a_ranks, RankCSR)
         key = (
-            m, k, n, mask_key(a_mask), mask_key(b_mask),
-            strategy or self.strategy, itemsize, tune,
+            m, k, n, mask_key(a_mask), mask_key(b_mask), rank_key(a_ranks),
+            rank_payload, strategy or self.strategy, itemsize, tune,
         )
         plan = self._plan_cache.get(key)
         if plan is None:
+            rank_map = a_ranks.rank_map() if rank_payload else a_ranks
             plan = plan_matmul(
                 m, k, n, self.config(strategy),
-                a_mask=a_mask, b_mask=b_mask, itemsize=itemsize,
+                a_mask=a_mask, b_mask=b_mask, a_ranks=rank_map,
+                rank_payload=rank_payload, itemsize=itemsize,
             )
             if tune:
                 from repro.sched.tuner import tune_plan  # deferred: no cycle
@@ -138,26 +147,89 @@ class DistributedMatmul:
 
     def __call__(
         self,
-        a: jax.Array,
+        a: jax.Array | None,
         b: jax.Array,
         *,
         a_mask: np.ndarray | None = None,
         b_mask: np.ndarray | None = None,
+        a_ranks: BlockRankMap | RankCSR | None = None,
         strategy: str | None = None,
         tune: bool = False,
     ) -> jax.Array:
+        """C = A @ B.  ``a_ranks`` plans A block-rank-sparse:
+
+        * a ``RankCSR`` supplies the factor payload — ``a`` may be
+          ``None`` (A *is* the factorization) and execution multiplies the
+          factors (``execute_rank_plan``), FLOPs and broadcast bytes
+          following per-panel ranks;
+        * a bare ``BlockRankMap`` refines the cost model / schedule only —
+          ``a`` must be the dense-stored operand and execution runs the
+          masked DAG over the ``rank > 0`` mask.
+        """
+        if a_mask is not None and a_ranks is not None:
+            # same rule the planner enforces for the BlockRankMap path —
+            # a RankCSR must not silently override an explicit mask
+            raise ValueError("pass either a_mask or a_ranks for A, not both")
+        if isinstance(a_ranks, RankCSR):
+            if a is not None:
+                # a RankCSR *is* the A operand; a dense twin would be
+                # silently ignored (the factors may be a lossy truncation
+                # of it) — make the caller choose one representation
+                raise ValueError(
+                    "pass a=None when a_ranks is a RankCSR: the "
+                    "factorization is the A operand (use "
+                    "RankCSR.to_dense() if you meant the dense product)"
+                )
+            return self._call_ranksparse(
+                a_ranks, b, b_mask=b_mask, strategy=strategy, tune=tune
+            )
+        if a is None:
+            raise ValueError("a=None requires a_ranks to be a RankCSR")
         m, k = a.shape
         k2, n = b.shape
         if k != k2:
             raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
         plan = self.plan(
-            m, k, n, a_mask=a_mask, b_mask=b_mask, strategy=strategy,
-            itemsize=a.dtype.itemsize, tune=tune,
+            m, k, n, a_mask=a_mask, b_mask=b_mask, a_ranks=a_ranks,
+            strategy=strategy, itemsize=a.dtype.itemsize, tune=tune,
         )
         (mp, kp), (_, np_) = plan.padded_shapes
         a_p = _pad_to_shape(a, (mp, kp))
         b_p = _pad_to_shape(b, (kp, np_))
         c_p = sm.execute_plan(a_p, b_p, plan)
+        return c_p[:m, :n]
+
+    def _call_ranksparse(
+        self,
+        a_ranks: RankCSR,
+        b: jax.Array,
+        *,
+        b_mask: np.ndarray | None = None,
+        strategy: str | None = None,
+        tune: bool = False,
+    ) -> jax.Array:
+        m, k = a_ranks.shape
+        k2, n = b.shape
+        if k != k2:
+            raise ValueError(
+                f"contraction mismatch {a_ranks.shape} @ {b.shape}"
+            )
+        plan = self.plan(
+            m, k, n, b_mask=b_mask, a_ranks=a_ranks, strategy=strategy,
+            itemsize=b.dtype.itemsize, tune=tune,
+        )
+        (mp, kp), (_, np_) = plan.padded_shapes
+        b_p = _pad_to_shape(b, (kp, np_))
+        if plan.local_impl != "ranksparse":
+            # factor layout does not fit this grid: densify and run the
+            # planned masked DAG (correct, mask-level pruning only)
+            a_p = _pad_to_shape(jnp.asarray(a_ranks.to_dense()), (mp, kp))
+            c_p = sm.execute_plan(a_p, b_p, plan)
+            return c_p[:m, :n]
+        u_all, v_all = sm.rank_operands(a_ranks, plan)
+        c_p = sm.execute_rank_plan(
+            jnp.asarray(u_all), jnp.asarray(v_all), b_p, plan
+        )
         return c_p[:m, :n]
 
 
@@ -195,13 +267,50 @@ class NonuniformMatmul:
             "cols": self.col_b.padding_waste,
         }
 
-    def plan(self, *, itemsize: int = 4) -> MatmulPlan:
-        """The underlying uniform-tile plan for the bucketized product."""
+    def plan(
+        self, *, a_ranks: np.ndarray | None = None, itemsize: int = 4
+    ) -> MatmulPlan:
+        """The underlying uniform-tile plan for the bucketized product.
+
+        ``a_ranks`` is a *logical* (row_blocks, inner_blocks) per-block
+        rank map; see :meth:`physical_rank_map`.
+        """
         return self.mm.plan(
             self.row_b.padded_extent,
             self.inner_b.padded_extent,
             self.col_b.padded_extent,
+            a_ranks=(
+                self.physical_rank_map(a_ranks)
+                if a_ranks is not None else None
+            ),
             itemsize=itemsize,
+        )
+
+    def physical_rank_map(self, logical_ranks: np.ndarray) -> BlockRankMap:
+        """Expand a logical per-block rank map onto the physical tile grid.
+
+        Every physical tile inherits its logical block's rank, clamped by
+        the tile's valid extents (a submatrix cannot exceed its parent
+        block's rank, nor its own dimensions).  Rank 0 means the logical
+        block is screened out — its tiles are pruned like masked blocks.
+        """
+        ranks = np.asarray(logical_ranks, dtype=np.int32)
+        want = (self.row_tiling.num_blocks, self.inner_tiling.num_blocks)
+        if ranks.shape != want:
+            raise ValueError(
+                f"logical rank map {ranks.shape} must match the logical "
+                f"block grid {want}"
+            )
+        bid_r = np.asarray(self.row_b.block_id)
+        bid_i = np.asarray(self.inner_b.block_id)
+        valid_r = np.asarray(self.row_b.valid)
+        valid_i = np.asarray(self.inner_b.valid)
+        phys = ranks[np.ix_(bid_r, bid_i)]
+        cap = np.minimum(valid_r[:, None], valid_i[None, :])
+        return BlockRankMap(
+            ranks=np.minimum(phys, cap).astype(np.int32),
+            bm=self.tile,
+            bk=self.tile,
         )
 
     def _expand(self, x: jax.Array, bdim: bk.BucketedTiling, axis: int):
@@ -222,12 +331,28 @@ class NonuniformMatmul:
         # in order, tiles in order within a block)
         return c[jnp.asarray(rsel)][:, jnp.asarray(csel)]
 
-    def __call__(self, a: jax.Array, b: jax.Array) -> jax.Array:
+    def __call__(
+        self,
+        a: jax.Array,
+        b: jax.Array,
+        *,
+        a_ranks: np.ndarray | None = None,
+    ) -> jax.Array:
+        """``a_ranks`` (logical per-block rank map) plans A's physical
+        tiles rank-sparse: rank-0 logical blocks are screened out of the
+        product and the plan's costs/schedule follow the tile ranks."""
         if a.shape != (self.row_tiling.extent, self.inner_tiling.extent):
             raise ValueError(f"A shape {a.shape} mismatches tilings")
         if b.shape != (self.inner_tiling.extent, self.col_tiling.extent):
             raise ValueError(f"B shape {b.shape} mismatches tilings")
         a_p = self._expand(self._expand(a, self.row_b, 0), self.inner_b, 1)
         b_p = self._expand(self._expand(b, self.inner_b, 0), self.col_b, 1)
-        c_p = self.mm(a_p, b_p)
+        c_p = self.mm(
+            a_p,
+            b_p,
+            a_ranks=(
+                self.physical_rank_map(a_ranks)
+                if a_ranks is not None else None
+            ),
+        )
         return self._compact(c_p)

@@ -30,10 +30,10 @@ import math
 
 import numpy as np
 
-from repro.core.sparsity import mask_matmul_flops
+from repro.core.sparsity import BlockRankMap, mask_matmul_flops
 from repro.core.summa import SummaConfig, resolve_multi_issue
 
-__all__ = ["MatmulPlan", "PlanCost", "plan_matmul", "mask_key"]
+__all__ = ["MatmulPlan", "PlanCost", "plan_matmul", "mask_key", "rank_key"]
 
 
 def _ceil_to(x: int, mult: int) -> int:
@@ -48,14 +48,35 @@ def mask_key(mask: np.ndarray | None) -> tuple | None:
     return (mask.shape, hashlib.sha1(mask.tobytes()).hexdigest())
 
 
+def rank_key(ranks) -> tuple | None:
+    """Stable cache key for a rank structure (``BlockRankMap`` or
+    ``RankCSR``): block grid + extents + per-block-rank content digest.
+    Factor *values* are intentionally not keyed — the plan depends only on
+    the static structure (``DistributedMatmul`` documents this)."""
+    if ranks is None:
+        return None
+    rank_map = ranks.rank_map() if hasattr(ranks, "rank_map") else ranks
+    arr = np.ascontiguousarray(rank_map.ranks, dtype=np.int32)
+    return (
+        arr.shape,
+        rank_map.bm,
+        rank_map.bk,
+        hashlib.sha1(arr.tobytes()).hexdigest(),
+    )
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class PlanCost:
     """Static cost estimates attached to a plan (modeled, per device)."""
 
     flops_dense: float  # global useful FLOPs of the dense product
-    flops_sparse: float  # global FLOPs given the masks (== dense if none)
+    flops_sparse: float  # global FLOPs given masks AND ranks (== dense if none)
     comm_bytes: dict  # strategy -> modeled per-device collective bytes
     fill_in: float  # flops_sparse / flops_dense
+    # Mask-only accounting of the same structure (every live block charged
+    # its dense area).  Equals ``flops_sparse`` unless the plan carries
+    # per-block ranks, where the gap is exactly what rank-sparsity buys.
+    flops_mask: float | None = None
 
     def best_strategy(self, candidates: tuple[str, ...]) -> str:
         known = [c for c in candidates if c in self.comm_bytes]
@@ -96,9 +117,15 @@ class MatmulPlan:
     device_live: np.ndarray | None  # (p_row, p_col, k_steps) bool
     local_cols: np.ndarray | None  # (p_row, p_col, mb_loc, S) int32, -1 pad
     local_block: tuple[int, int, int] | None  # (bm, bk, bn) for the kernel
-    local_impl: str  # "dense" | "masked" | "bsmm"
+    local_impl: str  # "dense" | "masked" | "bsmm" | "ranksparse"
     cost: PlanCost
     itemsize: int
+    # Padded (M_blk, K_blk) int32 per-block ranks of A (block-rank
+    # sparsity); None unless planned with ``a_ranks=``.  ``a_mask`` is then
+    # ``a_ranks > 0`` and ``local_impl == "ranksparse"`` when the factor
+    # layout fits the grid (``execute_rank_plan`` consumes the factors;
+    # dense-stored execution of the same plan runs the masked DAG).
+    a_ranks: np.ndarray | None = None
     # Per-plan multiple-issue window (paper Eq. 1).  ``None`` defers to
     # ``cfg.resolve_lookahead``; the schedule autotuner (repro.sched.tuner)
     # sets it, and ``core.summa._exec_taskbased`` honors it.
@@ -171,6 +198,12 @@ class MatmulPlan:
             "fill_in": self.cost.fill_in,
             "flops_dense": self.cost.flops_dense,
             "flops_sparse": self.cost.flops_sparse,
+            "flops_mask": self.cost.flops_mask,
+            "mean_rank": (
+                float(self.a_ranks[self.a_ranks > 0].mean())
+                if self.a_ranks is not None and (self.a_ranks > 0).any()
+                else None
+            ),
             "comm_bytes": {
                 s: float(v) for s, v in self.cost.comm_bytes.items()
             },
@@ -296,6 +329,7 @@ def _comm_model(
     p_row: int,
     p_col: int,
     itemsize: int,
+    a_live_elems: float | None = None,
 ) -> dict:
     """Modeled per-device collective bytes for each execution strategy.
 
@@ -308,14 +342,19 @@ def _comm_model(
     they move the full remote shards regardless of masks, so their bytes
     are not scaled by liveness (masked plans never execute them — the
     numbers say what switching would cost).
+
+    ``a_live_elems`` overrides the A-side broadcast volume (summed over
+    live panels): rank-sparse plans broadcast *factor* panels whose bytes
+    follow the per-panel ranks, not the dense panel area.
     """
     del k_steps  # liveness already folded into `live`
     # psum/all_gather over a size-1 axis moves nothing — gate each
     # operand's term on its broadcast axis actually having peers.
-    panel = (
-        m_loc * kb_width * (p_col > 1) + kb_width * n_loc * (p_row > 1)
-    ) * itemsize
-    bcast = 2.0 * panel * live
+    if a_live_elems is None:
+        a_live_elems = float(m_loc * kb_width * live)
+    bcast = 2.0 * itemsize * (
+        a_live_elems * (p_col > 1) + kb_width * n_loc * live * (p_row > 1)
+    )
     allgather = itemsize * (
         m_loc * k_pad * (p_col - 1) / max(p_col, 1)
         + k_pad * n_loc * (p_row - 1) / max(p_row, 1)
@@ -337,19 +376,39 @@ def plan_matmul(
     *,
     a_mask: np.ndarray | None = None,
     b_mask: np.ndarray | None = None,
+    a_ranks: BlockRankMap | None = None,
+    rank_payload: bool = True,
     itemsize: int = 4,
 ) -> MatmulPlan:
     """Plan C = A @ B on ``cfg``'s grid; the single schedule source.
 
     ``a_mask``/``b_mask`` are block masks over the *logical* shapes; block
     sizes must divide them evenly.  Either may be ``None`` (treated as a
-    single all-ones block on that side).  Returns a plan whose
-    ``padded_shapes`` the caller pads operands to before
-    ``core.summa.execute_plan``.
+    single all-ones block on that side).  ``a_ranks`` refines A's mask
+    into per-block numerical ranks (``BlockRankMap``, or anything with a
+    ``rank_map()`` such as ``RankCSR``); it replaces ``a_mask`` and makes
+    the cost model charge each block its factored gemm cost and its
+    factor-sized broadcast bytes.  ``rank_payload=False`` says the caller
+    has no factor payload (dense-stored A, rank map for useful-work
+    accounting and pruning only): the plan then schedules — and the task
+    graph / tuner model — the masked DAG it will actually execute, not
+    the factored pipeline.  Returns a plan whose ``padded_shapes`` the
+    caller pads operands to before ``core.summa.execute_plan`` (or
+    ``execute_rank_plan`` for factorized operands).
     """
     if m <= 0 or k <= 0 or n <= 0:
         raise ValueError(f"bad shape ({m},{k})x({k},{n})")
     p_row, p_col = cfg.p_row, cfg.p_col
+    if a_ranks is not None:
+        if a_mask is not None:
+            raise ValueError("pass either a_mask or a_ranks for A, not both")
+        if hasattr(a_ranks, "rank_map"):  # RankCSR and friends
+            a_ranks = a_ranks.rank_map()
+        if a_ranks.shape != (m, k):
+            raise ValueError(
+                f"a_ranks tiles {a_ranks.shape}, expected ({m},{k})"
+            )
+        a_mask = a_ranks.mask
     masked = a_mask is not None or b_mask is not None
     if not masked:
         kmult = math.lcm(p_row, p_col)
@@ -376,6 +435,7 @@ def plan_matmul(
                 itemsize=itemsize,
             ),
             fill_in=1.0,
+            flops_mask=flops,
         )
         return MatmulPlan(
             cfg=cfg, m=m, k=k, n=n, m_pad=m_pad, k_pad=k_pad, n_pad=n_pad,
@@ -428,9 +488,19 @@ def plan_matmul(
     local_cols = None
     local_block = None
     local_impl = "masked"
+    a_ranks_p = None
+    if a_ranks is not None:
+        a_ranks_p = np.zeros((m_pad // bm_sz, k_pad // bk_sz), np.int32)
+        a_ranks_p[: a_ranks.m_blocks, : a_ranks.k_blocks] = a_ranks.ranks
+        # The factor layout (U panels of uniform width, V rows batched per
+        # local block row) needs a payload and row blocks aligned to the
+        # grid; otherwise execution (and therefore the schedule model) is
+        # the dense-stored masked DAG.
+        if rank_payload and m_blk_p % p_row == 0:
+            local_impl = "ranksparse"
     # BSMM needs row blocks aligned to the grid and big enough to make a
     # sane kernel block (>= 8 rows: TPU sublane minimum).
-    if (
+    elif (
         cfg.local_matmul == "pallas"
         and live
         and m_blk_p % p_row == 0
@@ -442,15 +512,44 @@ def plan_matmul(
 
     sparse, dense = mask_matmul_flops(a_mask_p, b_mask_p, bm_sz, bk_sz, bn_sz)
     m_loc, n_loc = m_pad // p_row, n_pad // p_col
+    mask_flops = float(sparse)
+    a_live_elems = None
+    if a_ranks_p is not None:
+        from repro.core.sparsity import (
+            rank_matmul_flops,
+            rank_panel_factored_comm,
+        )
+
+        padded_map = BlockRankMap(ranks=a_ranks_p, bm=bm_sz, bk=bk_sz)
+        rank_flops, _, _ = rank_matmul_flops(padded_map, b_mask_p, bn_sz)
+        sparse = rank_flops
+        if local_impl == "ranksparse":
+            # Broadcast volume of the A-side panels: a factored panel
+            # moves a (m_loc, r_k) U panel plus (mb_loc, r_k, bk) V rows
+            # (r_k = the panel's max block rank, the executor's static
+            # width); past r* = bm·bk/(bm+bk) the panel is reconstructed
+            # owner-side and dense panel bytes travel — the exact
+            # per-panel comm decision the executor takes
+            # (sparsity.rank_panel_factored_comm).
+            mb_loc = m_blk_p // p_row
+            r_live = a_ranks_p.max(axis=0)  # (K_blk,) per-panel width
+            a_live_elems = 0.0
+            for kk in live:
+                r_k = int(r_live[kk])
+                if rank_panel_factored_comm(r_k, bm_sz, bk_sz):
+                    a_live_elems += m_loc * r_k + mb_loc * r_k * bk_sz
+                else:
+                    a_live_elems += m_loc * bk_sz
     cost = PlanCost(
         flops_dense=float(dense),
         flops_sparse=float(sparse),
         comm_bytes=_comm_model(
             m_loc=m_loc, n_loc=n_loc, k_pad=k_pad, kb_width=kb_width,
             live=len(live), k_steps=k_steps, p_row=p_row, p_col=p_col,
-            itemsize=itemsize,
+            itemsize=itemsize, a_live_elems=a_live_elems,
         ),
         fill_in=float(sparse) / float(dense) if dense else 0.0,
+        flops_mask=mask_flops,
     )
     return MatmulPlan(
         cfg=cfg, m=m, k=k, n=n, m_pad=m_pad, k_pad=k_pad, n_pad=n_pad,
@@ -458,4 +557,5 @@ def plan_matmul(
         a_mask=a_mask_p, b_mask=b_mask_p, device_live=device_live,
         local_cols=local_cols, local_block=local_block,
         local_impl=local_impl, cost=cost, itemsize=itemsize,
+        a_ranks=a_ranks_p,
     )

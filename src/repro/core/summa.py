@@ -71,7 +71,10 @@ __all__ = [
     "resolve_multi_issue",
     "reference_matmul",
     "reference_blocksparse_matmul",
+    "reference_ranksparse_matmul",
     "execute_plan",
+    "execute_rank_plan",
+    "rank_operands",
     "summa_matmul",
     "summa_blocksparse_matmul",
     "summa_25d_matmul",
@@ -193,6 +196,23 @@ def reference_blocksparse_matmul(
     a_z = jnp.where(jnp.asarray(am), a, 0)
     b_z = jnp.where(jnp.asarray(bm_), b, 0)
     return reference_matmul(a_z, b_z, accum_dtype)
+
+
+def reference_ranksparse_matmul(
+    a_ranks,
+    b: jax.Array,
+    b_mask: np.ndarray | None = None,
+    accum_dtype=jnp.float32,
+):
+    """Oracle for rank-sparse matmul: densify the ``RankCSR``, then matmul
+    (optionally with B's block mask applied)."""
+    a = jnp.asarray(a_ranks.to_dense()).astype(b.dtype)
+    if b_mask is not None:
+        mb, kb = a_ranks.rank_map().ranks.shape
+        return reference_blocksparse_matmul(
+            a, b, np.ones((mb, kb), dtype=bool), b_mask, accum_dtype
+        )
+    return reference_matmul(a, b, accum_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -404,6 +424,204 @@ def _exec_sparse_bsmm(a_loc, b_loc, cols_loc, plan):
     return c.astype(cfg.accum_dtype)
 
 
+def _rank_panel_widths(plan) -> dict[int, int]:
+    """Static per-live-panel factor width: the max block rank in that
+    panel's (padded) column of the rank grid (>= 1 on live panels)."""
+    return {
+        kk: max(int(plan.a_ranks[:, kk].max()), 1)
+        for kk in plan.live_panels
+    }
+
+
+def _exec_ranksparse(u_loc, v_loc, b_loc, plan, *, r_pad: int):
+    """Block-rank-sparse rank-k updates from factorized A panels.
+
+    A's blocks arrive as stacked factors (``rank_operands`` layout): for
+    live panel ``kk`` this broadcasts a width-``r_k`` U panel, the matching
+    V rows, and B's dense panel, then evaluates every local block row as
+    ``U @ (V @ B)`` — two skinny gemms whose FLOPs follow the panel rank.
+    Two independent per-panel fallbacks (static, shared with the planner's
+    comm model and the task graph):
+
+    * comm — past r* = bm·bk/(bm+bk) the factors outweigh the dense
+      panel, so the owner column reconstructs locally and the dense panel
+      is broadcast instead;
+    * compute — near the threshold the fused dense dot beats the
+      two-stage contraction (``RANK_COMPUTE_MARGIN``); factors may still
+      travel (they're smaller) and be reconstructed receiver-side.
+
+    Rank raggedness *within* a panel is carried by zero factor columns
+    (the executed width is the panel max — the plan's ``flops_sparse``
+    stays per-block useful work, the same padding-vs-useful gap
+    ``NonuniformMatmul.padding_waste`` documents for block extents).
+    """
+    from repro.core.sparsity import (
+        rank_panel_factored_comm,
+        rank_panel_factored_compute,
+    )
+
+    cfg = plan.cfg
+    bk = plan.kb_width
+    k_steps = plan.k_steps
+    m_loc, n_loc = u_loc.shape[0], b_loc.shape[1]
+    t_a = k_steps // max(cfg.p_col, 1) or 1  # A-side panels per grid column
+    t_b = b_loc.shape[0] // bk
+    mb_loc = v_loc.shape[0] // r_pad
+    bm = m_loc // mb_loc
+    widths = _rank_panel_widths(plan)
+
+    c = jnp.zeros((m_loc, n_loc), cfg.accum_dtype)
+    u_parts = []  # factored panels: (mb_loc, bm, r_k) U factors ...
+    w_parts = []  # ... and their (mb_loc, r_k, n_loc) V·B intermediates
+    for kk in plan.live_panels:
+        r_k = min(widths[kk], r_pad)
+        owner_col = kk // t_a
+        owner_row = kk // t_b
+        u_panel = jax.lax.dynamic_slice_in_dim(
+            u_loc, (kk % t_a) * r_pad, r_k, 1
+        )
+        v_panel = jax.lax.dynamic_slice_in_dim(
+            v_loc, (kk % t_a) * bk, bk, 1
+        ).reshape(mb_loc, r_pad, bk)[:, :r_k, :]
+        b_panel = jax.lax.dynamic_slice_in_dim(
+            b_loc, (kk % t_b) * bk, bk, 0
+        )
+        b_bc = _bcast_panel(b_panel, owner_row, cfg.row_axis)
+        if rank_panel_factored_comm(r_k, bm, bk):
+            u_bc = _bcast_panel(u_panel, owner_col, cfg.col_axis)
+            v_bc = _bcast_panel(v_panel, owner_col, cfg.col_axis)
+            if rank_panel_factored_compute(r_k, bm, bk, n_loc):
+                u_parts.append(u_bc.reshape(mb_loc, bm, r_k))
+                w_parts.append(
+                    jnp.einsum(
+                        "irk,kn->irn", v_bc, b_bc,
+                        preferred_element_type=cfg.accum_dtype,
+                    )
+                )
+            else:
+                # factors travel (smaller), receivers reconstruct the
+                # dense panel and run the fused dot
+                a_panel = jnp.einsum(
+                    "ibr,irk->ibk", u_bc.reshape(mb_loc, bm, r_k), v_bc,
+                    preferred_element_type=cfg.accum_dtype,
+                ).reshape(m_loc, bk).astype(u_loc.dtype)
+                c = _local_dot(a_panel, b_bc, c, cfg)
+        else:
+            # Owner-side reconstruction: every device rebuilds the dense
+            # panel from its *local* factors (garbage off the owner
+            # column, zeroed by the masked psum), so only dense panel
+            # bytes travel.
+            u3 = u_panel.reshape(mb_loc, bm, r_k)
+            a_panel = jnp.einsum(
+                "ibr,irk->ibk", u3, v_panel,
+                preferred_element_type=cfg.accum_dtype,
+            ).reshape(m_loc, bk).astype(u_loc.dtype)
+            a_bc = _bcast_panel(a_panel, owner_col, cfg.col_axis)
+            c = _local_dot(a_bc, b_bc, c, cfg)
+    if u_parts:
+        # All factored panels resolve in ONE batched contraction over the
+        # concatenated rank axis — per local block row, a (bm, sum r_k) x
+        # (sum r_k, n_loc) gemm.  Panel-at-a-time accumulation would run
+        # sum-r_k skinny gemms instead, which is ~17x slower on CPU BLAS
+        # and wastes MXU occupancy on TPU.
+        u_cat = jnp.concatenate(u_parts, axis=2)
+        w_cat = jnp.concatenate(w_parts, axis=1)
+        c = c + jnp.einsum(
+            "ibR,iRn->ibn", u_cat, w_cat,
+            preferred_element_type=cfg.accum_dtype,
+        ).reshape(m_loc, n_loc)
+    return c
+
+
+def _exec_ranksparse_grouped(u_loc, v_loc, b_loc, plan, *, r_pad: int):
+    """Rank-sparse update through the grouped-gemm Pallas kernel.
+
+    Gathers the live factor panels (full ``r_pad`` width — the kernel
+    wants uniform tiles), then runs stage 1 (every block's ``V @ B_panel``,
+    ragged across panels) as ONE grouped gemm: V rows are the tokens,
+    each ``r_pad``-row tile's "expert" is its gathered panel position, and
+    the B panels are the expert weights.  Stage 2 (``U @ ·`` + the segment
+    sum into C rows) is a batched contraction over local block rows.
+
+    Panels past the comm crossover (``rank_panel_factored_comm`` on the
+    broadcast width ``r_pad``) are densified owner-side and run as dense
+    dots outside the grouped stage, exactly like the jnp executor — the
+    kernel's uniform ``r_pad`` padding (vs the model's per-panel ``r_k``)
+    is the only remaining model-vs-executed comm gap.
+    """
+    from repro.core.sparsity import rank_panel_factored_comm
+    from repro.kernels.grouped_gemm import grouped_gemm_pallas
+
+    cfg = plan.cfg
+    bk = plan.kb_width
+    k_steps = plan.k_steps
+    m_loc, n_loc = u_loc.shape[0], b_loc.shape[1]
+    t_a = k_steps // max(cfg.p_col, 1) or 1
+    t_b = b_loc.shape[0] // bk
+    mb_loc = v_loc.shape[0] // r_pad
+    bm = m_loc // mb_loc
+
+    c = jnp.zeros((m_loc, n_loc), cfg.accum_dtype)
+    u_parts, v_parts, b_parts = [], [], []
+    for kk in plan.live_panels:
+        owner_col = kk // t_a
+        owner_row = kk // t_b
+        u_panel = jax.lax.dynamic_slice_in_dim(
+            u_loc, (kk % t_a) * r_pad, r_pad, 1
+        )
+        v_panel = jax.lax.dynamic_slice_in_dim(
+            v_loc, (kk % t_a) * bk, bk, 1
+        )
+        b_panel = jax.lax.dynamic_slice_in_dim(
+            b_loc, (kk % t_b) * bk, bk, 0
+        )
+        b_bc = _bcast_panel(b_panel, owner_row, cfg.row_axis)
+        if rank_panel_factored_comm(r_pad, bm, bk):
+            u_parts.append(_bcast_panel(u_panel, owner_col, cfg.col_axis))
+            v_parts.append(_bcast_panel(v_panel, owner_col, cfg.col_axis))
+            b_parts.append(b_bc)
+        else:
+            a_panel = jnp.einsum(
+                "ibr,irk->ibk",
+                u_panel.reshape(mb_loc, bm, r_pad),
+                v_panel.reshape(mb_loc, r_pad, bk),
+                preferred_element_type=cfg.accum_dtype,
+            ).reshape(m_loc, bk).astype(u_loc.dtype)
+            a_bc = _bcast_panel(a_panel, owner_col, cfg.col_axis)
+            c = _local_dot(a_bc, b_bc, c, cfg)
+
+    if not u_parts:
+        return c
+    from repro.kernels.ops import _pick_tile
+
+    live = len(b_parts)
+    b_g = jnp.stack(b_parts)  # (L, bk, n_loc) — the "expert" weights
+    v_tokens = jnp.concatenate(v_parts, axis=0)  # (L*mb_loc*r_pad, bk)
+    tile_expert = jnp.asarray(
+        np.repeat(np.arange(live, dtype=np.int32), mb_loc)
+    )
+    # same tile selection + pad/slice handling as ops.ranksparse_matmul,
+    # so awkward n_loc stays lane-aligned on TPU
+    bn = _pick_tile(n_loc, 256)
+    n_pad_loc = -(-n_loc // bn) * bn
+    y = grouped_gemm_pallas(
+        v_tokens,
+        jnp.pad(b_g, ((0, 0), (0, 0), (0, n_pad_loc - n_loc))),
+        tile_expert,
+        bt=r_pad,
+        bk=bk,
+        bn=bn,
+        out_dtype=cfg.accum_dtype,
+        interpret=jax.default_backend() != "tpu",
+    )[:, :n_loc]
+    y4 = y.reshape(live, mb_loc, r_pad, n_loc)
+    u_g = jnp.stack(u_parts).reshape(live, mb_loc, bm, r_pad)
+    c = c + jnp.einsum(
+        "libr,lirn->ibn", u_g, y4, preferred_element_type=cfg.accum_dtype
+    ).reshape(m_loc, n_loc)
+    return c.astype(cfg.accum_dtype)
+
+
 _EXEC_IMPLS: dict[str, Callable] = {
     "procedural": _exec_procedural,
     "taskbased": _exec_taskbased,
@@ -459,7 +677,11 @@ def execute_plan(
             check_vma=False,
         )(a, b, cols)
 
-    if plan.local_impl == "masked":
+    if plan.local_impl in ("masked", "ranksparse"):
+        # Rank plans given dense-stored operands run the masked DAG: the
+        # ranks informed the cost model / scheduler, but without factors
+        # there is nothing rank-sized to multiply (execute_rank_plan is
+        # the factorized path).
 
         def fn_masked(a_loc, b_loc):
             return _exec_sparse_dag(a_loc, b_loc, plan).astype(out_dtype)
@@ -484,6 +706,106 @@ def execute_plan(
         out_specs=spec2,
         check_vma=False,
     )(a, b)
+
+
+def rank_operands(a_ranks, plan) -> tuple[np.ndarray, np.ndarray]:
+    """Lay a ``RankCSR`` out as the dense-stored factor operands the
+    rank-sparse executor consumes.
+
+    Returns ``(u_all, v_all)``: ``u_all`` is (m_pad, k_steps·r_pad) with
+    block row ``i``, panel ``kk`` holding ``U[i,kk]`` at column offset
+    ``kk·r_pad`` (zero beyond the true rank); ``v_all`` is
+    (m_blocks·r_pad, k_pad) with ``V[i,kk]`` at row offset ``i·r_pad``,
+    column offset ``kk·bk``.  Both shard P(row_axis, col_axis) exactly
+    like A — every U/V panel lives on the device that owns the matching A
+    panel, so ``_bcast_panel``'s owner arithmetic carries over unchanged.
+    Memoized per padded geometry on the (frozen) ``RankCSR`` so repeated
+    eager calls don't re-lay-out the factors.
+    """
+    cache_key = ("_rank_operands", plan.m_pad, plan.k_pad, plan.k_steps)
+    cached = a_ranks.__dict__.get(cache_key)
+    if cached is not None:
+        return cached
+    bm, bk = a_ranks.bm, a_ranks.bk
+    r_pad = a_ranks.r_pad
+    csr = a_ranks.csr
+    m_blk_p = plan.m_pad // bm
+    k_steps = plan.k_steps
+    u_all = np.zeros((plan.m_pad, k_steps * r_pad), np.float32)
+    v_all = np.zeros((m_blk_p * r_pad, plan.k_pad), np.float32)
+    for i in range(csr.m_blocks):
+        lo, hi = csr.row_ptr[i], csr.row_ptr[i + 1]
+        for s in range(lo, hi):
+            kk = int(csr.col_idx[s])
+            u_all[i * bm : (i + 1) * bm, kk * r_pad : (kk + 1) * r_pad] = (
+                a_ranks.u[s]
+            )
+            v_all[i * r_pad : (i + 1) * r_pad, kk * bk : (kk + 1) * bk] = (
+                a_ranks.v[s]
+            )
+    a_ranks.__dict__[cache_key] = (u_all, v_all)
+    return u_all, v_all
+
+
+def execute_rank_plan(
+    u: jax.Array,
+    v: jax.Array,
+    b: jax.Array,
+    plan,
+    *,
+    out_dtype: Any | None = None,
+) -> jax.Array:
+    """Run C = A @ B with A given as factorized rank-sparse operands.
+
+    ``u``/``v`` come from :func:`rank_operands` (already padded); ``b``
+    must be padded to the plan's (k_pad, n_pad).  All three are sharded
+    P(row_axis, col_axis).  Requires ``plan.local_impl == "ranksparse"``
+    (the planner guarantees the factor layout fits the grid).  With
+    ``local_matmul="pallas"`` the gathered live panels run through the
+    grouped-gemm kernel (kernels/grouped_gemm.py), stage 1 being the
+    ragged per-rank V·B gemms.
+    """
+    cfg = plan.cfg
+    if plan.local_impl != "ranksparse":
+        raise ValueError(
+            f"plan.local_impl={plan.local_impl!r}: not a rank-sparse plan "
+            "(factor layout needs M blocks aligned to the grid rows; "
+            "densify with RankCSR.to_dense() and use execute_plan)"
+        )
+    k_r = u.shape[1]
+    if k_r % plan.k_steps:
+        raise ValueError(
+            f"U width {k_r} must be k_steps={plan.k_steps} factor panels"
+        )
+    r_pad = k_r // plan.k_steps
+    (mp, kp), (_, np_) = plan.padded_shapes
+    m_blk_p = v.shape[0] // r_pad
+    if u.shape[0] != mp or v.shape != (m_blk_p * r_pad, kp) or b.shape != (kp, np_):
+        raise ValueError(
+            f"factor operands u{u.shape}/v{v.shape}/b{b.shape} do not "
+            f"match the plan's padded shapes ({mp},{kp}) @ ({kp},{np_})"
+        )
+    out_dtype = out_dtype or b.dtype
+    spec2 = P(cfg.row_axis, cfg.col_axis)
+    if plan.b_mask is not None:
+        b = _apply_block_mask(b, plan.b_mask)
+    local = (
+        _exec_ranksparse_grouped
+        if cfg.local_matmul == "pallas"
+        else _exec_ranksparse
+    )
+
+    def fn_rank(u_loc, v_loc, b_loc):
+        c = local(u_loc, v_loc, b_loc, plan, r_pad=r_pad)
+        return c.astype(out_dtype)
+
+    return shard_map(
+        fn_rank,
+        mesh=cfg.mesh,
+        in_specs=(spec2, spec2, spec2),
+        out_specs=spec2,
+        check_vma=False,
+    )(u, v, b)
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,13 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.grouped_gemm import grouped_gemm_pallas
 from repro.kernels.tiled_matmul import tiled_matmul_pallas
 
-__all__ = ["tiled_matmul", "bsmm", "grouped_gemm", "flash_attention"]
+__all__ = [
+    "tiled_matmul",
+    "bsmm",
+    "grouped_gemm",
+    "ranksparse_matmul",
+    "flash_attention",
+]
 
 
 def _interpret() -> bool:
@@ -140,6 +146,66 @@ def grouped_gemm(
         interpret=_interpret(),
     )
     return y[:, :f]
+
+
+def ranksparse_matmul(
+    a_ranks,
+    b: jax.Array,
+    *,
+    bn: int = 256,
+    out_dtype=None,
+) -> jax.Array:
+    """Local C = A @ B with A block-rank-sparse (a ``RankCSR``).
+
+    The ragged per-rank stage (every stored block's ``V[s] @ B[k_s]``,
+    blocks of different panels and ranks interleaved) is ONE grouped-gemm
+    kernel launch: stacked V rows are the tokens, each ``r_pad``-row tile
+    chases its block's K panel through scalar prefetch (``tile_expert`` =
+    the CSR column index), exactly the MegaBlocks layout of
+    ``grouped_gemm_pallas``.  Stage 2 applies the U factors per block and
+    segment-sums into C's block rows.  FLOPs scale with ``nnz · r_pad``,
+    not the dense shape.
+    """
+    k, n = b.shape
+    bm_sz, bk_sz = a_ranks.bm, a_ranks.bk
+    csr = a_ranks.csr
+    if k != csr.n_blocks * bk_sz:
+        raise ValueError(
+            f"B rows {k} != rank structure K {csr.n_blocks * bk_sz}"
+        )
+    out_dtype = out_dtype or b.dtype
+    m = csr.m_blocks * bm_sz
+    if csr.nnz == 0:
+        return jnp.zeros((m, n), out_dtype)
+    r_pad = a_ranks.r_pad
+    # stage 1: y[s] = V[s] @ B_panel[col_idx[s]] for every stored block
+    v_tokens = jnp.asarray(a_ranks.v.reshape(csr.nnz * r_pad, bk_sz))
+    b_panels = b.reshape(csr.n_blocks, bk_sz, n)
+    bn = _pick_tile(n, bn)
+    b_p = jnp.pad(b_panels, ((0, 0), (0, 0), (0, -(-n // bn) * bn - n)))
+    y = grouped_gemm_pallas(
+        v_tokens,
+        b_p,
+        jnp.asarray(csr.col_idx),
+        bt=r_pad,
+        bk=bk_sz,
+        bn=bn,
+        out_dtype=jnp.float32,
+        interpret=_interpret(),
+    )[:, :n]
+    # stage 2: per-block U application + segment sum into C block rows
+    y3 = y.reshape(csr.nnz, r_pad, n)
+    partials = jnp.einsum(
+        "sbr,srn->sbn", jnp.asarray(a_ranks.u), y3,
+        preferred_element_type=jnp.float32,
+    )
+    row_ids = jnp.asarray(
+        np.repeat(np.arange(csr.m_blocks), csr.row_lengths())
+    )
+    c_blocks = jax.ops.segment_sum(
+        partials, row_ids, num_segments=csr.m_blocks
+    )
+    return c_blocks.reshape(m, n).astype(out_dtype)
 
 
 def flash_attention(

@@ -121,6 +121,22 @@ class SimResult:
             },
         }
 
+    def fingerprint(self) -> str:
+        """Stable digest of the simulated schedule: makespan plus every
+        recorded span, hashed at full float64 precision.  Two simulations
+        of the same graph on the same machine model must be *bitwise*
+        identical — the determinism contract the golden-trace test pins
+        (the simulator is pure numpy list-scheduling; any nondeterminism
+        is a bug)."""
+        import hashlib
+
+        h = hashlib.sha1()
+        h.update(np.float64(self.makespan_s).tobytes())
+        for task, start, finish in self.spans or ():
+            h.update(f"{task.tid}:{task.kind}:{task.step}".encode())
+            h.update(np.asarray([start, finish], np.float64).tobytes())
+        return h.hexdigest()
+
     # -- Chrome trace --------------------------------------------------------
 
     def chrome_trace(self) -> dict:

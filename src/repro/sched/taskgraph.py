@@ -268,6 +268,40 @@ def _bsmm_step_flops(plan) -> np.ndarray:
     return cnt.astype(np.float64) * (2.0 * bm * bk * n_loc)
 
 
+def _rank_step_flops(plan) -> np.ndarray:
+    """(p_row, p_col, L) executed FLOPs per live-panel position from the
+    plan's per-block ranks (``local_impl="ranksparse"``).
+
+    Device (i, j) charges, for each of its local block rows, the factored
+    block cost of that row's rank in the panel (``block_rank_flops`` — the
+    same per-block ordering-by-flop-count the executor applies), gated on
+    the panel being live for the device at all.  This is where rank
+    *nonuniformity* becomes per-device load imbalance the simulator and
+    tuner can see.
+    """
+    from repro.core.sparsity import block_rank_flops
+
+    p_row, p_col = plan.p_row, plan.p_col
+    ranks = plan.a_ranks  # (M_blk, K_blk) padded
+    m_blk = ranks.shape[0]
+    mb_loc = m_blk // p_row
+    bm = plan.m_pad // m_blk
+    bk = plan.kb_width
+    n_loc = plan.n_pad // p_col
+    live = list(plan.live_panels)
+    out = np.zeros((p_row, p_col, len(live)))
+    for i in range(p_row):
+        rows = ranks[i * mb_loc : (i + 1) * mb_loc, :]
+        for t, kk in enumerate(live):
+            flops = sum(
+                block_rank_flops(int(r), bm, bk, n_loc) for r in rows[:, kk]
+            )
+            for j in range(p_col):
+                if plan.device_live is None or plan.device_live[i, j, kk]:
+                    out[i, j, t] = flops
+    return out
+
+
 def from_plan(
     plan,
     *,
@@ -352,6 +386,11 @@ def from_plan(
 
         def gemm_flops(t, i, j):
             return float(step_flops[i, j, t])
+    elif plan.local_impl == "ranksparse":
+        step_flops = _rank_step_flops(plan)  # (p_row, p_col, L)
+
+        def gemm_flops(t, i, j):
+            return float(step_flops[i, j, t])
     else:
         # dense — and "masked", whose DAG executor runs dense panel dots
         # on masked operands: a device whose C tile is dead for this
@@ -363,11 +402,36 @@ def from_plan(
 
     a_panel_bytes = BCAST_FACTOR * m_loc * kb * itemsize if p_col > 1 else 0.0
     b_panel_bytes = BCAST_FACTOR * kb * n_loc * itemsize if p_row > 1 else 0.0
+    if plan.local_impl == "ranksparse" and p_col > 1:
+        # Factor panels travel instead of dense A panels: a (m_loc, r_k)
+        # U panel plus (mb_loc, r_k, bk) V rows, r_k the panel max rank —
+        # unless the panel is past the comm crossover r* = bm·bk/(bm+bk),
+        # where it is reconstructed owner-side and dense bytes travel.
+        # Same per-panel decision as core.plan / the executor.
+        from repro.core.sparsity import rank_panel_factored_comm
+
+        mb_loc = plan.a_ranks.shape[0] // p_row
+        bm_sz = plan.m_pad // plan.a_ranks.shape[0]
+        r_live = plan.a_ranks.max(axis=0)
+
+        def a_bytes(t, i):
+            r_k = max(int(r_live[steps[t]]), 1)
+            elems = (
+                m_loc * r_k + mb_loc * r_k * kb
+                if rank_panel_factored_comm(r_k, bm_sz, kb)
+                else m_loc * kb
+            )
+            return BCAST_FACTOR * elems * itemsize
+    else:
+
+        def a_bytes(t, i):
+            return a_panel_bytes
+
     _emit_pipeline(
         b,
         n_steps=n_steps,
         lookahead=window,
-        a_bytes=lambda t, i: a_panel_bytes,
+        a_bytes=a_bytes,
         b_bytes=lambda t, j: b_panel_bytes,
         gemm_flops=gemm_flops,
         accum_flops=lambda i, j: float(m_loc * n_loc),

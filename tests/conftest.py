@@ -1,21 +1,28 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real device
-count (1); multi-device behaviour is tested via subprocesses that set
---xla_force_host_platform_device_count themselves."""
+"""Shared fixtures + the differential-oracle case builders.
+
+NOTE: no XLA_FLAGS here — tests see the real device count (1);
+multi-device behaviour is tested via subprocesses that set
+--xla_force_host_platform_device_count themselves.  The tests directory
+is put on the subprocess PYTHONPATH so subprocess code can reuse the
+oracle helpers (``from conftest import oracle_case, run_strategy``).
+"""
 import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+TESTS = os.path.join(REPO, "tests")
 
 
 def run_subprocess(code: str, devices: int = 8, timeout: int = 600):
     """Run python code in a fresh process with N emulated host devices."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC
+    env["PYTHONPATH"] = SRC + os.pathsep + TESTS
     proc = subprocess.run(
         [sys.executable, "-c", code],
         env=env,
@@ -35,3 +42,161 @@ def run_subprocess(code: str, devices: int = 8, timeout: int = 600):
 @pytest.fixture(scope="session")
 def subproc():
     return run_subprocess
+
+
+# ---------------------------------------------------------------------------
+# Differential-oracle harness (tests/test_oracle.py + subprocess sweeps)
+#
+# One case builder + one strategy runner shared by every grid, so the
+# "strategy x structure x grid vs NumPy" sweep is specified exactly once.
+# ---------------------------------------------------------------------------
+
+#: every structure family the planner claims to absorb
+ORACLE_FAMILIES = (
+    "dense", "random", "banded", "decay", "one_sided", "rank_sparse"
+)
+#: every execution route the front-ends expose
+ORACLE_STRATEGIES = ("procedural", "taskbased", "allgather", "ring", "auto")
+#: shared comparison tolerance vs the float64 NumPy reference (all paths
+#: accumulate in f32; K=128 keeps accumulation error ~1e-5)
+ORACLE_ATOL = 5e-4
+ORACLE_RTOL = 1e-4
+
+
+def _expand(mask: np.ndarray, br: int, bc: int) -> np.ndarray:
+    return np.kron(np.asarray(mask, bool), np.ones((br, bc), bool))
+
+
+def oracle_case(family: str, *, m=64, k=128, n=96, blocks=8, seed=0) -> dict:
+    """Build one oracle case: operands, structure, float64 NumPy reference.
+
+    Returns a dict with ``a``/``b`` (float32), the structure arguments to
+    pass to ``DistributedMatmul`` (``a_mask``/``b_mask``/``a_ranks``), and
+    ``ref`` — the NumPy float64 product of the structure-zeroed operands
+    (for ``rank_sparse``, of the densified factorization).
+    """
+    from repro.core import (
+        banded_block_mask,
+        decay_block_mask,
+        decay_rank_map,
+        random_block_mask,
+        synthesize_rank_csr,
+    )
+
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    bm_sz, bk_sz, bn_sz = m // blocks, k // blocks, n // blocks
+    a_mask = b_mask = a_ranks = None
+    if family == "dense":
+        pass
+    elif family == "random":
+        a_mask = random_block_mask(blocks, blocks, 0.5, seed=seed + 1)
+        b_mask = random_block_mask(blocks, blocks, 0.6, seed=seed + 2)
+    elif family == "banded":
+        a_mask = banded_block_mask(blocks, blocks, 1)
+        b_mask = banded_block_mask(blocks, blocks, 2)
+    elif family == "decay":
+        a_mask = decay_block_mask(blocks, blocks, decay=0.8, threshold=5e-2)
+        b_mask = decay_block_mask(blocks, blocks, decay=0.5, threshold=5e-2)
+    elif family == "one_sided":
+        b_mask = banded_block_mask(blocks, blocks, 2)
+    elif family == "rank_sparse":
+        rank_map = decay_rank_map(
+            blocks, blocks, bm_sz, bk_sz,
+            max_rank=max(2, min(bm_sz, bk_sz) // 4),
+            decay=0.7, threshold=2e-2,
+        )
+        a_ranks = synthesize_rank_csr(rank_map, seed=seed + 3)
+        a = a_ranks.to_dense()  # dense-stored twin of the factorization
+    else:
+        raise ValueError(f"unknown oracle family {family!r}")
+    a_z = a * _expand(a_mask, bm_sz, bk_sz) if a_mask is not None else a
+    b_z = b * _expand(b_mask, bk_sz, bn_sz) if b_mask is not None else b
+    ref = a_z.astype(np.float64) @ b_z.astype(np.float64)
+    return {
+        "family": family,
+        "a": a, "b": b,
+        "a_mask": a_mask, "b_mask": b_mask, "a_ranks": a_ranks,
+        "ref": ref,
+        "shape": (m, k, n),
+        "blocks": blocks,
+    }
+
+
+def run_strategy(case: dict, mesh, strategy: str, *, row_axis="data",
+                 col_axis="model") -> np.ndarray:
+    """Execute one oracle case with one strategy on ``mesh``.
+
+    ``procedural``/``taskbased``/``allgather`` go through
+    ``DistributedMatmul``; ``auto`` is the tuner-driven route
+    (``tune=True``); ``ring`` is the sparsity-blind collective matmul
+    (``dist.collective_matmul.allgather_matmul``) fed structure-zeroed
+    operands, since it takes no masks by design.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import DistributedMatmul
+
+    a, b = case["a"], case["b"]
+    if strategy == "ring":
+        from repro.dist.collective_matmul import allgather_matmul
+
+        blocks = case["blocks"]
+        m, k, n = case["shape"]
+        a_z = a
+        if case["a_mask"] is not None:
+            a_z = a * _expand(case["a_mask"], m // blocks, k // blocks)
+        b_z = b
+        if case["b_mask"] is not None:
+            b_z = b * _expand(case["b_mask"], k // blocks, n // blocks)
+        return np.asarray(
+            allgather_matmul(
+                jnp.asarray(a_z), jnp.asarray(b_z),
+                mesh=mesh, axis=col_axis, batch_axes=(row_axis,),
+            )
+        )
+    tune = strategy == "auto"
+    mm = DistributedMatmul(
+        mesh,
+        row_axis=row_axis,
+        col_axis=col_axis,
+        strategy="taskbased" if tune else strategy,
+    )
+    if case["a_ranks"] is not None:
+        out = mm(
+            None, jnp.asarray(b), a_ranks=case["a_ranks"],
+            b_mask=case["b_mask"], tune=tune,
+        )
+    else:
+        out = mm(
+            jnp.asarray(a), jnp.asarray(b),
+            a_mask=case["a_mask"], b_mask=case["b_mask"], tune=tune,
+        )
+    return np.asarray(out)
+
+
+def check_case(case: dict, got: np.ndarray, label: str = "") -> None:
+    np.testing.assert_allclose(
+        got, case["ref"], atol=ORACLE_ATOL, rtol=ORACLE_RTOL,
+        err_msg=f"oracle mismatch: {label or case['family']}",
+    )
+
+
+#: the subprocess sweep body — one grid per subprocess, full
+#: strategy x family cross inside (shared by test_oracle.py)
+ORACLE_SWEEP_CODE = r"""
+import numpy as np
+from conftest import (ORACLE_FAMILIES, ORACLE_STRATEGIES, check_case,
+                      oracle_case, run_strategy)
+from repro.launch.mesh import make_mesh
+
+grid = ({p_row}, {p_col})
+mesh = make_mesh(grid, ("data", "model"))
+for family in ORACLE_FAMILIES:
+    case = oracle_case(family, seed=7)
+    for strategy in ORACLE_STRATEGIES:
+        got = run_strategy(case, mesh, strategy)
+        check_case(case, got, f"{{family}}/{{strategy}}/{p_row}x{p_col}")
+print("ORACLE_SWEEP_OK")
+"""

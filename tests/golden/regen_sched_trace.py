@@ -1,0 +1,39 @@
+"""Regenerate the committed golden schedule trace.
+
+Run after an *intentional* schedule/simulator change:
+
+    PYTHONPATH=src:tests python tests/golden/regen_sched_trace.py
+
+and commit the refreshed ``sched_trace_small.json`` together with the
+change that moved it — the golden test exists so sched refactors diff
+loudly, not silently.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from test_sched import GOLDEN_TRACE, _golden_graph  # noqa: E402
+
+from repro.sched import simulate  # noqa: E402
+
+
+def main() -> None:
+    sim = simulate(_golden_graph(), trace=True)
+    payload = {
+        "makespan_s": sim.makespan_s,
+        "fingerprint": sim.fingerprint(),
+        "trace": sim.chrome_trace(),
+    }
+    with open(GOLDEN_TRACE, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(
+        f"wrote {GOLDEN_TRACE}: makespan={sim.makespan_s:.3e}s, "
+        f"fingerprint={sim.fingerprint()[:12]}, "
+        f"{len(sim.spans)} spans"
+    )
+
+
+if __name__ == "__main__":
+    main()

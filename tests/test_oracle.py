@@ -1,0 +1,247 @@
+"""Differential-oracle harness: every strategy x structure x grid vs NumPy.
+
+The systematic cross-strategy correctness gate: one parametrized sweep
+running every execution route (procedural / taskbased / allgather / ring
+/ auto) against every structure family the planner absorbs (dense,
+random, banded, decay, one-sided, rank-sparse) on a 1x1 grid in-process
+and on real 2x2 / 2x4 meshes in subprocesses, all against a float64
+NumPy reference with one shared tolerance (tests/conftest.py holds the
+case builders).  Also pins the rank-cost acceptance claims (plan FLOPs
+scale with average block rank) and the sparsity-generator bugfixes.
+"""
+import numpy as np
+import pytest
+
+from conftest import (
+    ORACLE_FAMILIES,
+    ORACLE_STRATEGIES,
+    ORACLE_SWEEP_CODE,
+    check_case,
+    oracle_case,
+    run_strategy,
+)
+from repro.core import (
+    DistributedMatmul,
+    decay_block_mask,
+    decay_rank_map,
+    plan_matmul,
+    random_block_mask,
+    synthesize_rank_csr,
+)
+from repro.core.summa import SummaConfig
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    def __init__(self, sizes):
+        self.shape = sizes
+
+
+def _grid_cfg(p_row, p_col, **kw):
+    return SummaConfig(
+        mesh=FakeMesh({"data": p_row, "model": p_col}),
+        row_axis="data",
+        col_axis="model",
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1x1 grid: full strategy x family cross, in-process
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ORACLE_STRATEGIES)
+@pytest.mark.parametrize("family", ORACLE_FAMILIES)
+def test_oracle_1x1(family, strategy):
+    mesh = make_host_mesh(1, 1)
+    case = oracle_case(family, seed=3)
+    got = run_strategy(case, mesh, strategy)
+    check_case(case, got, f"{family}/{strategy}/1x1")
+
+
+def test_oracle_pallas_rank_kernel_1x1():
+    """The grouped-gemm rank executor and the local grouped-gemm kernel
+    agree with the densify oracle.  Blocks are 32x32 with r_pad=8 so the
+    factor width sits *below* the comm crossover (r* = 16) and the
+    grouped stage actually runs (small blocks would densify instead)."""
+    import jax.numpy as jnp
+
+    from repro.core import reference_ranksparse_matmul, synthesize_rank_csr
+    from repro.kernels import ops as kops
+
+    mesh = make_host_mesh(1, 1)
+    rank_map = decay_rank_map(4, 4, 32, 32, max_rank=8, decay=0.8)
+    rcsr = synthesize_rank_csr(rank_map, seed=5)
+    assert rcsr.r_pad == 8
+    rng = np.random.default_rng(5)
+    b = jnp.asarray(rng.normal(size=(128, 96)), jnp.float32)
+    want = np.asarray(reference_ranksparse_matmul(rcsr, b))
+    mm = DistributedMatmul(mesh, strategy="taskbased", local_matmul="pallas")
+    got = np.asarray(mm(None, b, a_ranks=rcsr))
+    np.testing.assert_allclose(got, want, atol=5e-4, rtol=1e-4)
+    # the single-launch local kernel route (stage 1 = one grouped gemm)
+    got_local = np.asarray(kops.ranksparse_matmul(rcsr, b))
+    np.testing.assert_allclose(got_local, want, atol=5e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# real 2x2 and 2x4 meshes: the same sweep under shard_map semantics
+# ---------------------------------------------------------------------------
+
+
+def test_oracle_sweep_2x2(subproc):
+    out = subproc(ORACLE_SWEEP_CODE.format(p_row=2, p_col=2), devices=4)
+    assert "ORACLE_SWEEP_OK" in out
+
+
+def test_oracle_sweep_2x4(subproc):
+    out = subproc(ORACLE_SWEEP_CODE.format(p_row=2, p_col=4), devices=8)
+    assert "ORACLE_SWEEP_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# acceptance: plan FLOPs scale with average block rank
+# ---------------------------------------------------------------------------
+
+
+def test_plan_flops_scale_with_mean_rank():
+    """Halving the rank budget must shrink planned FLOPs accordingly: the
+    factored cost is linear in rank below the dense-fallback threshold,
+    and always bounded by the mask-only accounting."""
+    cfg = _grid_cfg(2, 2)
+    flops = []
+    means = []
+    for max_rank in (4, 8, 16):
+        rm = decay_rank_map(
+            16, 16, 64, 64, max_rank=max_rank, decay=0.4, threshold=5e-2
+        )
+        plan = plan_matmul(1024, 1024, 1024, cfg, a_ranks=rm)
+        assert plan.local_impl == "ranksparse"
+        assert plan.cost.flops_sparse < plan.cost.flops_mask
+        flops.append(plan.cost.flops_sparse)
+        means.append(rm.mean_rank)
+    assert flops[0] < flops[1] < flops[2]
+    # linear regime: FLOPs track mean rank within 25%
+    for i in (1, 2):
+        ratio = flops[i] / flops[0]
+        rank_ratio = means[i] / means[0]
+        assert abs(ratio - rank_ratio) / rank_ratio < 0.25, (ratio, rank_ratio)
+
+
+def test_rank_comm_bytes_below_mask_only():
+    """Factor panels travel instead of dense panels: the rank plan's
+    broadcast bytes are strictly below the mask-only plan's for the same
+    structure (multi-row/col grid so both operands broadcast)."""
+    cfg = _grid_cfg(2, 2)
+    rm = decay_rank_map(16, 16, 64, 64, max_rank=8, decay=0.4, threshold=5e-2)
+    rank_plan = plan_matmul(1024, 1024, 1024, cfg, a_ranks=rm)
+    mask_plan = plan_matmul(1024, 1024, 1024, cfg, a_mask=rm.mask)
+    for strat in ("procedural", "taskbased"):
+        assert (
+            rank_plan.cost.comm_bytes[strat] < mask_plan.cost.comm_bytes[strat]
+        )
+    # gather-style schedules stay sparsity- and rank-blind
+    for strat in ("allgather", "ring"):
+        assert (
+            rank_plan.cost.comm_bytes[strat] == mask_plan.cost.comm_bytes[strat]
+        )
+
+
+def test_rank_map_cache_key_is_structural():
+    """Same rank structure => same cached plan; different ranks => new."""
+    mesh = make_host_mesh(1, 1)
+    mm = DistributedMatmul(mesh, strategy="taskbased")
+    rm = decay_rank_map(4, 4, 16, 16, max_rank=8, decay=0.9)
+    r1 = synthesize_rank_csr(rm, seed=1)
+    r2 = synthesize_rank_csr(rm, seed=2)  # same structure, new factors
+    p1 = mm.plan(64, 64, 64, a_ranks=r1)
+    assert mm.plan(64, 64, 64, a_ranks=r2) is p1
+    rm_lo = decay_rank_map(4, 4, 16, 16, max_rank=4, decay=0.9)
+    assert mm.plan(64, 64, 64, a_ranks=synthesize_rank_csr(rm_lo)) is not p1
+
+
+def test_nonuniform_rank_map_screens_blocks():
+    """NonuniformMatmul accepts a logical per-block rank map: rank-0
+    blocks are screened out of the product, everything else matches the
+    dense oracle; the expanded physical plan is rank-sparse."""
+    import jax.numpy as jnp
+
+    from repro.core import NonuniformMatmul, nonuniform_tiling
+
+    mesh = make_host_mesh(1, 1)
+    mm = DistributedMatmul(mesh, strategy="taskbased")
+    rt = nonuniform_tiling(100, 5, seed=3)
+    it = nonuniform_tiling(120, 4, seed=4)
+    ct = nonuniform_tiling(90, 6, seed=5)
+    nm = NonuniformMatmul(mm, rt, it, ct, tile=16)
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(100, 120)).astype(np.float32)
+    b = rng.normal(size=(120, 90)).astype(np.float32)
+    full = np.full((5, 4), 16, dtype=np.int32)
+    got = np.asarray(nm(jnp.asarray(a), jnp.asarray(b), a_ranks=full))
+    np.testing.assert_allclose(
+        got, a.astype(np.float64) @ b.astype(np.float64),
+        atol=5e-4, rtol=1e-4,
+    )
+    ranks = full.copy()
+    ranks[1, 2] = 0  # screen one logical block out entirely
+    a_z = a.copy()
+    a_z[rt.offsets[1] : rt.offsets[2], it.offsets[2] : it.offsets[3]] = 0
+    got2 = np.asarray(nm(jnp.asarray(a), jnp.asarray(b), a_ranks=ranks))
+    np.testing.assert_allclose(
+        got2, a_z.astype(np.float64) @ b.astype(np.float64),
+        atol=5e-4, rtol=1e-4,
+    )
+    plan = nm.plan(a_ranks=ranks)
+    # no factor payload behind a bare rank map: the plan schedules the
+    # masked DAG it will actually execute (the rank structure still
+    # screens blocks and refines the useful-work accounting)
+    assert plan.local_impl == "masked"
+    assert plan.a_ranks is not None
+    assert plan.cost.fill_in < 1.0
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfixes: generator validation + realized-fill clamp
+# ---------------------------------------------------------------------------
+
+
+def test_random_block_mask_realized_fill_clamped():
+    """The row/column coverage fix-up must not silently overshoot the
+    requested fill.  Hard guarantee (any grid/fill/seed): nnz <=
+    max(ceil(fill*size), m + n), since every surviving surplus block is
+    the sole support of its row or column.  Previously a 1 x n grid at
+    tiny fill came back fully dense."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        mb = int(rng.integers(1, 12))
+        nb = int(rng.integers(1, 12))
+        fill = float(rng.uniform(0.01, 1.0))
+        mask = random_block_mask(mb, nb, fill, seed=int(rng.integers(1e6)))
+        hard = max(int(np.ceil(fill * mb * nb)), mb + nb)
+        assert mask.sum() <= hard, (mb, nb, fill, int(mask.sum()), hard)
+        # coverage guarantee intact
+        assert mask.any(axis=1).all() and mask.any(axis=0).all()
+    # typical bound max(ceil, max(m, n)) on representative cases,
+    # including the degenerate single-row/column grids of the bug report
+    for mb, nb, fill, seed in [
+        (1, 16, 0.05, 0), (16, 1, 0.05, 1), (2, 9, 0.1, 2),
+        (8, 8, 0.3, 3), (5, 5, 0.9, 4), (3, 17, 0.02, 5),
+    ]:
+        mask = random_block_mask(mb, nb, fill, seed=seed)
+        bound = max(int(np.ceil(fill * mb * nb)), max(mb, nb))
+        assert mask.sum() <= bound, (mb, nb, fill, int(mask.sum()), bound)
+
+
+def test_decay_block_mask_validates_parameters():
+    with pytest.raises(ValueError, match="decay must be > 0"):
+        decay_block_mask(4, 4, decay=0.0)
+    with pytest.raises(ValueError, match="decay must be > 0"):
+        decay_block_mask(4, 4, decay=-1.0)
+    with pytest.raises(ValueError, match="threshold must be in"):
+        decay_block_mask(4, 4, threshold=1.5)
+    with pytest.raises(ValueError, match="threshold must be in"):
+        decay_block_mask(4, 4, threshold=0.0)
+    with pytest.raises(ValueError, match="block grid"):
+        decay_block_mask(0, 4)

@@ -1,20 +1,36 @@
 """MatmulPlan: planner accounting, cost model, cache, and the planned
-block-sparse execution paths (masked DAG + per-device BSMM kernel)."""
+block-sparse execution paths (masked DAG + per-device BSMM kernel).
+
+The hypothesis block at the bottom property-tests the plan invariants
+(cost monotonicity in fill and rank, lookahead clamping, per-device
+pruning accounting, cache-key stability); like tests/test_blocking.py it
+needs the ``[dev]`` extra and simply contributes no tests without it.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (
+    BlockRankMap,
     DistributedMatmul,
     NonuniformMatmul,
     banded_block_mask,
+    mask_key,
     nonuniform_tiling,
     plan_matmul,
+    rank_key,
     reference_blocksparse_matmul,
     reference_matmul,
 )
 from repro.core.summa import SummaConfig, summa_25d_matmul
 from repro.launch.mesh import make_host_mesh
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev extra not installed: plain tests still run
+    HAVE_HYPOTHESIS = False
 
 
 class FakeMesh:
@@ -280,3 +296,119 @@ def test_summa_25d_oracle_on_222_mesh(subproc):
     replica-divisible k_blocks."""
     out = subproc(SUMMA_25D_222_CODE, devices=8)
     assert "SUMMA_25D_222_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests: plan invariants (satellite of the rank PR)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        f_lo=st.floats(0.05, 0.5),
+        f_hi=st.floats(0.5, 1.0),
+        seed=st.integers(0, 500),
+    )
+    @settings(deadline=None, max_examples=40)
+    def test_plan_cost_monotone_in_fill(f_lo, f_hi, seed):
+        """Growing a mask (superset of blocks) never shrinks planned FLOPs
+        or broadcast bytes: threshold one random field at two fills so the
+        low-fill mask is nested in the high-fill one."""
+        rng = np.random.default_rng(seed)
+        field = rng.random((8, 8))
+        cfg = _grid_cfg(2, 2)
+        plans = [
+            plan_matmul(
+                64, 64, 64, cfg,
+                a_mask=field < f, b_mask=np.ones((8, 8), bool),
+            )
+            for f in (f_lo, f_hi)
+        ]
+        lo, hi = plans
+        assert lo.cost.flops_sparse <= hi.cost.flops_sparse
+        for strat in ("procedural", "taskbased"):
+            assert lo.cost.comm_bytes[strat] <= hi.cost.comm_bytes[strat]
+        assert lo.cost.fill_in <= hi.cost.fill_in + 1e-12
+
+    @given(
+        seed=st.integers(0, 500),
+        bump=st.integers(1, 8),
+    )
+    @settings(deadline=None, max_examples=40)
+    def test_plan_cost_monotone_in_rank(seed, bump):
+        """Raising any block's rank (same mask) never shrinks planned
+        FLOPs or factor-broadcast bytes."""
+        rng = np.random.default_rng(seed)
+        ranks = rng.integers(0, 9, size=(8, 8)).astype(np.int32)
+        if not ranks.any():
+            ranks[0, 0] = 1
+        hi = np.minimum(ranks + bump * (ranks > 0), 16).astype(np.int32)
+        cfg = _grid_cfg(2, 2)
+        p_lo = plan_matmul(
+            128, 128, 128, cfg, a_ranks=BlockRankMap(ranks, 16, 16)
+        )
+        p_hi = plan_matmul(
+            128, 128, 128, cfg, a_ranks=BlockRankMap(hi, 16, 16)
+        )
+        assert p_lo.cost.flops_sparse <= p_hi.cost.flops_sparse
+        assert p_lo.cost.flops_sparse <= p_lo.cost.flops_mask
+        for strat in ("procedural", "taskbased"):
+            assert p_lo.cost.comm_bytes[strat] <= p_hi.cost.comm_bytes[strat]
+
+    @given(
+        p_row=st.integers(1, 16),
+        p_col=st.integers(1, 16),
+        k_steps=st.integers(0, 64),
+        lookahead=st.one_of(st.none(), st.integers(-4, 128)),
+    )
+    @settings(deadline=None, max_examples=100)
+    def test_resolve_lookahead_always_in_range(p_row, p_col, k_steps, lookahead):
+        from repro.core.summa import resolve_multi_issue
+
+        got = resolve_multi_issue(p_row, p_col, k_steps, lookahead)
+        assert 1 <= got <= max(k_steps, 1)
+
+    @given(
+        fill=st.floats(0.1, 1.0),
+        seed=st.integers(0, 500),
+        p=st.sampled_from([(1, 1), (2, 2), (2, 4), (4, 4)]),
+    )
+    @settings(deadline=None, max_examples=40)
+    def test_per_device_pruning_accounting(fill, seed, p):
+        """Per-device skipped panels dominate the global count on every
+        device, and the per-device live totals agree with the plan's
+        device-liveness table exactly."""
+        from repro.core import random_block_mask
+
+        p_row, p_col = p
+        am = random_block_mask(8, 8, fill, seed=seed)
+        bm = random_block_mask(8, 8, fill, seed=seed + 1)
+        plan = plan_matmul(
+            64, 64, 64, _grid_cfg(p_row, p_col), a_mask=am, b_mask=bm
+        )
+        skipped = plan.skipped_panels_per_device()
+        assert skipped.shape == (p_row, p_col)
+        assert (skipped >= plan.skipped_panels_global).all()
+        live_total = plan.device_live.sum()
+        assert skipped.sum() == p_row * p_col * plan.k_steps - live_total
+        # every globally-live panel is live on at least one device
+        assert (
+            plan.device_live.any(axis=(0, 1)).sum() == len(plan.live_panels)
+        )
+
+    @given(seed=st.integers(0, 500))
+    @settings(deadline=None, max_examples=40)
+    def test_mask_and_rank_keys_stable_under_copies_and_views(seed):
+        rng = np.random.default_rng(seed)
+        mask = rng.random((6, 9)) < 0.5
+        assert mask_key(mask) == mask_key(mask.copy())
+        assert mask_key(mask) == mask_key(mask[:])  # view
+        assert mask_key(np.asfortranarray(mask)) == mask_key(mask)
+        flipped = mask.copy()
+        flipped[0, 0] ^= True
+        assert mask_key(flipped) != mask_key(mask)
+        ranks = (rng.integers(0, 5, size=(6, 9))).astype(np.int32)
+        rm = BlockRankMap(ranks, 8, 8)
+        rm2 = BlockRankMap(ranks.copy(), 8, 8)
+        assert rank_key(rm) == rank_key(rm2)
+        assert rank_key(rm) != rank_key(BlockRankMap(ranks, 8, 16))

@@ -123,6 +123,78 @@ def test_simulator_lookahead_monotone_and_comm_overlap():
     assert sim8.makespan_s >= sim8.busy_compute_s.max()
 
 
+GOLDEN_TRACE = __file__.rsplit("/", 1)[0] + "/golden/sched_trace_small.json"
+
+
+def _golden_graph():
+    """Small fixed schedule for the golden/determinism gate: nonuniform
+    2x2 grid, 4 K blocks, fixed seeds — regenerate the committed JSON
+    with ``python tests/golden/regen_sched_trace.py`` after an
+    *intentional* schedule change."""
+    tilings = [nonuniform_tiling(64, 4, seed=7 + s) for s in range(3)]
+    return from_tilings(2, 2, *tilings, lookahead=2)
+
+
+def test_simulator_bitwise_deterministic():
+    """Same graph + machine => bitwise-identical makespan, fingerprint,
+    and Chrome trace (the simulator is pure list scheduling; any
+    nondeterminism is a bug)."""
+    r1 = simulate(_golden_graph(), trace=True)
+    r2 = simulate(_golden_graph(), trace=True)
+    assert r1.makespan_s == r2.makespan_s  # bitwise, not approx
+    assert np.array_equal(r1.busy_compute_s, r2.busy_compute_s)
+    assert r1.fingerprint() == r2.fingerprint()
+    assert r1.chrome_trace() == r2.chrome_trace()
+
+
+def test_simulator_matches_golden_trace():
+    """sched refactors must diff loudly: the simulated schedule of the
+    fixed small graph must reproduce the committed golden Chrome trace
+    and fingerprint exactly."""
+    with open(GOLDEN_TRACE) as f:
+        golden = json.load(f)
+    sim = simulate(_golden_graph(), trace=True)
+    assert sim.fingerprint() == golden["fingerprint"]
+    assert sim.makespan_s == golden["makespan_s"]
+    assert sim.chrome_trace() == golden["trace"]
+
+
+def test_rank_plan_taskgraph_costs_follow_ranks():
+    """Rank-sparse plans put per-block-rank gemm costs and factor-sized
+    broadcast bytes on the task graph; rank nonuniformity shows up as
+    per-device load the multi-issue window then absorbs."""
+    from repro.core.sparsity import BlockRankMap
+
+    cfg = abstract_summa_config(4, 4, strategy="taskbased")
+    rng = np.random.default_rng(0)
+    # heavily nonuniform ranks (all below the dense-fallback threshold
+    # r* = 32 for 64x64 blocks): a few heavy blocks, many tiny ones
+    ranks = np.where(
+        rng.random((16, 16)) < 0.2,
+        rng.integers(16, 25, size=(16, 16)),
+        rng.integers(1, 5, size=(16, 16)),
+    ).astype(np.int32)
+    rank_plan = plan_matmul(
+        1024, 1024, 1024, cfg, a_ranks=BlockRankMap(ranks, 64, 64)
+    )
+    assert rank_plan.local_impl == "ranksparse"
+    mask_plan = plan_matmul(1024, 1024, 1024, cfg, a_mask=ranks > 0)
+    g_rank = from_plan(rank_plan)
+    g_mask = from_plan(mask_plan)
+    # graph costs follow ranks: strictly less work and fewer bytes moved
+    assert g_rank.total_flops() < g_mask.total_flops()
+    assert g_rank.total_bytes() < g_mask.total_bytes()
+    gemm_rank = sum(t.flops for t in g_rank.tasks if t.kind == "gemm")
+    assert gemm_rank == pytest.approx(rank_plan.cost.flops_sparse, rel=1e-9)
+    # the imbalance-absorption claim extends to rank-nonuniform inputs
+    s1 = simulate(from_plan(rank_plan, lookahead=1))
+    se = simulate(from_plan(rank_plan))
+    assert se.makespan_s <= s1.makespan_s
+    assert s1.makespan_s / se.makespan_s >= 1.1, (
+        s1.makespan_s, se.makespan_s
+    )
+
+
 def test_multi_issue_absorbs_nonuniform_imbalance():
     """The acceptance bar: on the EXPERIMENTS.md §Simulated-scaling
     workload (16x16 grid, N=4096, 64 nonuniform blocks/dim, seeds 1/2/3),
