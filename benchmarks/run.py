@@ -520,15 +520,206 @@ def bench_ranksparse(json_path: str) -> None:
     print(f"# wrote {json_path}", flush=True)
 
 
+def bench_contract(json_path: str) -> None:
+    """Tensor-contraction sweep + chained-contraction scheduling ->
+    BENCH_contract.json.
+
+    Two sections:
+
+    (1) executed contractions on the host mesh — one entry per spec
+    family (masked 3-D ``abc,cd->abd``, multi-contracted ``abc,bcd->ad``,
+    rank-sparse ``ab,bc->ac`` on a factor payload, nonuniform mode
+    extents), each recording wall time, the residual vs the float64
+    ``np.einsum`` reference, and the underlying plan digest — the proof
+    that the einsum front-end rides the same planned engine;
+
+    (2) the nonuniform chain: D = (A.B).C with §4.1 nonuniform blocks on
+    a virtual 8x8 grid, simulated sequentially (barrier between MMs) vs
+    as the union graph (``chain_graphs``) vs jointly tuned
+    (``tune_chain``).  The CI acceptance gate asserts
+    ``beats_sequential`` — the union graph's makespan is strictly below
+    the barrier sum (the paper's "no explicit internodal synchronization
+    lets MMs overlap", measured).  The simulation is deterministic, so
+    the gate is noise-free.
+    """
+    import json
+    import time as _t
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (
+        BlockSparseTensor,
+        DistributedMatmul,
+        contract,
+        contract_chain,
+        decay_block_mask,
+        decay_rank_map,
+        nonuniform_tiling,
+        synthesize_rank_csr,
+    )
+    from repro.launch.mesh import make_host_mesh
+    from repro.sched import chain_graphs, from_tilings, simulate, tune_chain
+
+    entries = []
+    mesh = make_host_mesh(1, 1)
+    mm = DistributedMatmul(mesh, strategy="taskbased")
+    rng = np.random.default_rng(0)
+
+    def timed(fn, *args):
+        out = fn(*args)
+        np.asarray(out.data)  # block
+        t0 = _t.perf_counter()
+        for _ in range(3):
+            out = fn(*args)
+        np.asarray(out.data)
+        return out, (_t.perf_counter() - t0) / 3
+
+    def dense(shape, block_shape, mask=None):
+        data = rng.normal(size=shape).astype(np.float32)
+        return BlockSparseTensor.from_dense(
+            jnp.asarray(data), block_shape=block_shape, mask=mask
+        )
+
+    def case_free2():
+        x = dense(
+            (16, 32, 512), (8, 16, 32),
+            mask=rng.random((2, 2, 16)) < 0.4,
+        )
+        y = dense((512, 384), (32, 32), mask=decay_block_mask(16, 12, 0.5))
+        return "abc,cd->abd", x, y, 64
+
+    def case_multi():
+        x = dense((512, 16, 32), (32, 8, 16), mask=rng.random((16, 2, 2)) < 0.5)
+        y = dense((16, 32, 384), (8, 16, 32))
+        return "abc,bcd->ad", x, y, 64
+
+    def case_rank():
+        rank_map = decay_rank_map(8, 8, 64, 64, max_rank=8, decay=0.7)
+        x = BlockSparseTensor.from_rank_csr(
+            synthesize_rank_csr(rank_map, seed=1)
+        )
+        y = dense((512, 384), (64, 32))
+        return "ab,bc->ac", x, y, 64
+    def case_nonuniform():
+        rt = nonuniform_tiling(500, 8, seed=1)
+        it = nonuniform_tiling(480, 6, seed=2)
+        ct = nonuniform_tiling(420, 7, seed=3)
+        x = BlockSparseTensor(
+            data=jnp.asarray(rng.normal(size=(500, 480)).astype(np.float32)),
+            tilings=(rt, it), mask=rng.random((8, 6)) < 0.5,
+        )
+        y = BlockSparseTensor(
+            data=jnp.asarray(rng.normal(size=(480, 420)).astype(np.float32)),
+            tilings=(it, ct),
+        )
+        return "ab,bc->ac", x, y, 64
+
+    for name, case in (
+        ("free2", case_free2), ("multi_contracted", case_multi),
+        ("rank_sparse", case_rank), ("nonuniform", case_nonuniform),
+    ):
+        spec, x, y, tile = case()
+        out, wall = timed(
+            lambda: contract(spec, x, y, mm=mm, tile=tile)
+        )
+        ref = np.einsum(
+            spec, x.to_dense().astype(np.float64),
+            y.to_dense().astype(np.float64),
+        )
+        resid = float(np.abs(np.asarray(out.data) - ref).max())
+        from repro.core.contract import _geometry_cached, _plan_step
+
+        plan = _plan_step(mm, _geometry_cached(mm, spec, x, y, tile), x)
+        entries.append(
+            {
+                "name": f"contract_{name}",
+                "spec": spec,
+                "wall_s": wall,
+                "max_abs_err": resid,
+                "out_fill": out.fill(),
+                "plan": plan.summary(),
+            }
+        )
+        _row(
+            f"contract_{name}", wall * 1e6,
+            f"spec={spec};err={resid:.2e};fill={plan.cost.fill_in:.3f}",
+        )
+
+    # (2) the nonuniform chain on a virtual 8x8 grid
+    nb, extent, (pr, pc) = 16, 2048, (8, 8)
+    tilings = [nonuniform_tiling(extent, nb, seed=s) for s in (1, 2, 3, 4)]
+    rt, it, ct, dt = tilings
+    builders = [
+        lambda la=None: from_tilings(pr, pc, rt, it, ct, lookahead=la),
+        lambda la=None: from_tilings(pr, pc, rt, ct, dt, lookahead=la),
+    ]
+    seq = float(sum(simulate(b(None)).makespan_s for b in builders))
+    joint = simulate(chain_graphs([b(None) for b in builders]))
+    las, tuned_sim, record = tune_chain(builders)
+    entries.append(
+        {
+            "name": f"chain_nonuniform_P{pr*pc}_N{extent}",
+            "grid": [pr, pc],
+            "blocks": nb,
+            "sequential_makespan_s": seq,
+            "joint_makespan_s": joint.makespan_s,
+            "tuned_makespan_s": tuned_sim.makespan_s,
+            "tuned_lookaheads": [int(la) for la in las],
+            "speedup_vs_sequential": seq / tuned_sim.makespan_s,
+            "beats_sequential": bool(tuned_sim.makespan_s < seq),
+        }
+    )
+    _row(
+        f"contract_chain_P{pr*pc}_N{extent}", tuned_sim.makespan_s * 1e6,
+        f"seq_us={seq*1e6:.1f};joint_us={joint.makespan_s*1e6:.1f};"
+        f"speedup={seq/tuned_sim.makespan_s:.3f};I={las}",
+    )
+
+    # executed chain on the host mesh (correctness + wall record)
+    am = decay_block_mask(8, 8, decay=0.5, threshold=5e-2)
+    x = dense((512, 512), (64, 64), mask=am)
+    y1 = dense((512, 512), (64, 64), mask=am)
+    y2 = dense((512, 384), (64, 48))
+    t0 = _t.perf_counter()
+    res, report = contract_chain(
+        [("ab,bc->ac", x, y1), ("ab,bc->ac", y2)], mm=mm, tune=True
+    )
+    wall = _t.perf_counter() - t0
+    ref = (
+        x.to_dense().astype(np.float64) @ y1.to_dense().astype(np.float64)
+    ) @ np.asarray(y2.data, np.float64)
+    entries.append(
+        {
+            "name": "chain_executed_N512",
+            "wall_s": wall,
+            "max_abs_err": float(np.abs(np.asarray(res.data) - ref).max()),
+            "joint_makespan_s": report["joint_makespan_s"],
+            "sequential_makespan_s": report["sequential_makespan_s"],
+            "lookaheads": report["lookaheads"],
+            "out_fill": res.fill(),
+        }
+    )
+    _row(
+        "contract_chain_executed_N512", wall * 1e6,
+        f"err={entries[-1]['max_abs_err']:.2e};"
+        f"I={report['lookaheads']};fill={res.fill():.3f}",
+    )
+    with open(json_path, "w") as f:
+        json.dump({"bench": "contract", "entries": entries}, f, indent=2)
+    print(f"# wrote {json_path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default="BENCH_summa.json")
     ap.add_argument("--sched-json", default="BENCH_sched.json")
     ap.add_argument("--ranksparse-json", default="BENCH_ranksparse.json")
+    ap.add_argument("--contract-json", default="BENCH_contract.json")
     ap.add_argument(
         "--only",
-        choices=("ranksparse", "sched", "summa"),
+        choices=("ranksparse", "sched", "summa", "contract"),
         help="run a single JSON-writing section (CI artifact jobs)",
     )
     args = ap.parse_args()
@@ -542,10 +733,14 @@ def main() -> None:
     if args.only == "summa":
         bench_planned_sparse(args.json)
         return
+    if args.only == "contract":
+        bench_contract(args.contract_json)
+        return
     bench_table1()
     bench_planned_sparse(args.json)
     bench_sched(args.sched_json)
     bench_ranksparse(args.ranksparse_json)
+    bench_contract(args.contract_json)
     bench_blocksparse()
     bench_strategies()
     bench_weak_scaling(args.quick)

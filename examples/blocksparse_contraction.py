@@ -6,9 +6,15 @@
    skipped at trace time (communication AND compute scale with fill).
 2. Nonuniformly blocked matrices (physics-driven blocking) through the
    bucketized uniform-tile engine.
-3. A chained contraction D = (A.B).C — two SUMMA multiplications in one
-   jitted program, schedulable jointly (the paper's "no global sync
-   lets multiple MMs overlap").
+3. A block-sparse *tensor* contraction T[abd] = sum_c X[abc] Y[cd]
+   through the einsum front-end (repro.core.contract): modes merge
+   block-contiguously, masks matricize exactly, and the product runs
+   through the same MatmulPlan engine.
+4. A chained contraction D = (A.B).C scheduled *jointly*: the union
+   task graph lets step 2's broadcasts overlap step 1's tail (the
+   paper's "no explicit internodal synchronization lets multiple MMs
+   overlap"), the tuner picks per-step windows, and execution honors
+   them.  The inferred intermediate mask propagates through the chain.
 """
 import os
 import sys
@@ -23,6 +29,7 @@ import numpy as np
 
 from repro.analysis.hlo import analyze_hlo
 from repro.core import (
+    BlockSparseTensor,
     DistributedMatmul,
     NonuniformMatmul,
     decay_block_mask,
@@ -88,17 +95,55 @@ def main():
         f"max|err|={np.abs(got2 - want2).max():.2e}"
     )
 
-    # --- 3. chained contraction D = (A.B).C ----------------------------------
-    c = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    # --- 3. block-sparse tensor contraction T[abd] = sum_c X[abc] Y[cd] ------
+    mm = DistributedMatmul(mesh, strategy="taskbased")
+    x3 = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(8, 64, 512)), jnp.float32),
+        block_shape=(4, 16, 32),
+        mask=rng.random((2, 4, 16)) < 0.5,
+    )
+    y3 = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(512, 384)), jnp.float32),
+        block_shape=(32, 32),
+        mask=decay_block_mask(16, 12, decay=0.4, threshold=5e-2),
+    )
+    t3 = mm.contract("abc,cd->abd", x3, y3)
+    ref3 = np.einsum(
+        "abc,cd->abd",
+        x3.to_dense().astype(np.float64),
+        y3.to_dense().astype(np.float64),
+    )
+    print(
+        f"tensor contraction abc,cd->abd  operand fills "
+        f"{x3.fill():.2f}/{y3.fill():.2f} -> out fill {t3.fill():.2f}  "
+        f"max|err|={np.abs(np.asarray(t3.data) - ref3).max():.2e}"
+    )
 
-    @jax.jit
-    def chain(a, b, c):
-        ab = summa_matmul(a, b, cfg)
-        return summa_matmul(ab, c, cfg)
-
-    got3 = np.asarray(chain(a, b, c))
-    want3 = np.asarray(reference_matmul(jnp.asarray(want := a @ b), c))
-    print(f"chained contraction max|err|={np.abs(got3 - np.asarray(want3)).max():.2e}")
+    # --- 4. chained contraction D = (A.B).C, jointly scheduled ---------------
+    am2 = decay_block_mask(kb, kb, decay=0.5, threshold=5e-2)
+    xc = BlockSparseTensor.from_dense(a, block_shape=(n // kb, n // kb), mask=am2)
+    yc = BlockSparseTensor.from_dense(b, block_shape=(n // kb, n // kb), mask=am2)
+    zc = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(n, n)), jnp.float32),
+        block_shape=(n // kb, n // kb),
+    )
+    d, report = mm.contract_chain(
+        [("ab,bc->ac", xc, yc), ("ab,bc->ac", zc)], tune=True
+    )
+    want4 = (
+        xc.to_dense().astype(np.float64) @ yc.to_dense().astype(np.float64)
+    ) @ np.asarray(zc.data, np.float64)
+    print(
+        f"chained contraction (A.B).C  max|err|="
+        f"{np.abs(np.asarray(d.data) - want4).max():.2e}"
+    )
+    print(
+        f"  joint schedule {report['joint_makespan_s']*1e6:.1f}us vs "
+        f"sequential {report['sequential_makespan_s']*1e6:.1f}us "
+        f"(x{report['speedup_vs_sequential']:.2f}, per-step "
+        f"I={report['lookaheads']}); intermediate mask propagated, "
+        f"D fill {d.fill():.2f}"
+    )
 
 
 if __name__ == "__main__":

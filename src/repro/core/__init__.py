@@ -1,5 +1,12 @@
 """Core: task-based SUMMA for block-sparse tensor computing (the paper)."""
 from repro.core.api import DistributedMatmul, NonuniformMatmul, pad_to_multiple
+from repro.core.contract import (
+    BlockSparseTensor,
+    ContractionSpec,
+    contract,
+    contract_chain,
+    parse_contraction,
+)
 from repro.core.plan import MatmulPlan, PlanCost, mask_key, plan_matmul, rank_key
 from repro.core.blocking import (
     BucketedTiling,

@@ -73,6 +73,10 @@ class DistributedMatmul:
     _plan_cache: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
+    # spec/tiling-keyed matricization geometry for core.contract
+    _contract_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     def config(self, strategy: str | None = None) -> sm.SummaConfig:
         return sm.SummaConfig(
@@ -112,6 +116,7 @@ class DistributedMatmul:
         strategy: str | None = None,
         itemsize: int = 4,
         tune: bool = False,
+        lookahead: int | None = None,
     ) -> MatmulPlan:
         """The (cached) execution plan for a (M, K) x (K, N) product.
 
@@ -121,12 +126,16 @@ class DistributedMatmul:
         ``RankCSR`` with the same ranks share a plan.  ``tune=True`` runs
         the schedule autotuner (repro.sched.tuner) over the plan: the
         cached result carries the simulated-makespan-optimal strategy /
-        k_blocks / lookahead instead of the static config.
+        k_blocks / lookahead instead of the static config.  ``lookahead``
+        pins the per-plan multiple-issue window explicitly (the chain
+        scheduler uses this to execute jointly tuned windows); it
+        overrides a tuned window.
         """
         rank_payload = isinstance(a_ranks, RankCSR)
         key = (
             m, k, n, mask_key(a_mask), mask_key(b_mask), rank_key(a_ranks),
             rank_payload, strategy or self.strategy, itemsize, tune,
+            lookahead,
         )
         plan = self._plan_cache.get(key)
         if plan is None:
@@ -140,6 +149,8 @@ class DistributedMatmul:
                 from repro.sched.tuner import tune_plan  # deferred: no cycle
 
                 plan = tune_plan(plan)
+            if lookahead is not None:
+                plan = dataclasses.replace(plan, lookahead=int(lookahead))
             self._plan_cache[key] = plan
         return plan
 
@@ -155,6 +166,7 @@ class DistributedMatmul:
         a_ranks: BlockRankMap | RankCSR | None = None,
         strategy: str | None = None,
         tune: bool = False,
+        lookahead: int | None = None,
     ) -> jax.Array:
         """C = A @ B.  ``a_ranks`` plans A block-rank-sparse:
 
@@ -181,7 +193,8 @@ class DistributedMatmul:
                     "RankCSR.to_dense() if you meant the dense product)"
                 )
             return self._call_ranksparse(
-                a_ranks, b, b_mask=b_mask, strategy=strategy, tune=tune
+                a_ranks, b, b_mask=b_mask, strategy=strategy, tune=tune,
+                lookahead=lookahead,
             )
         if a is None:
             raise ValueError("a=None requires a_ranks to be a RankCSR")
@@ -192,12 +205,35 @@ class DistributedMatmul:
         plan = self.plan(
             m, k, n, a_mask=a_mask, b_mask=b_mask, a_ranks=a_ranks,
             strategy=strategy, itemsize=a.dtype.itemsize, tune=tune,
+            lookahead=lookahead,
         )
         (mp, kp), (_, np_) = plan.padded_shapes
         a_p = _pad_to_shape(a, (mp, kp))
         b_p = _pad_to_shape(b, (kp, np_))
         c_p = sm.execute_plan(a_p, b_p, plan)
         return c_p[:m, :n]
+
+    # -- tensor contractions -------------------------------------------------
+
+    def contract(self, spec: str, x, y, **kwargs):
+        """Einsum-style binary block-sparse tensor contraction.
+
+        Thin delegate to :func:`core.contract.contract` with this
+        instance supplying the mesh/strategy, the plan cache, and the
+        spec/tiling-keyed matricization-geometry cache — repeated
+        contractions of the same structure (scanned layers, chained
+        steps) re-derive nothing.
+        """
+        from repro.core.contract import contract as _contract
+
+        return _contract(spec, x, y, mm=self, **kwargs)
+
+    def contract_chain(self, steps, **kwargs):
+        """Jointly scheduled chain of contractions
+        (:func:`core.contract.contract_chain`)."""
+        from repro.core.contract import contract_chain as _chain
+
+        return _chain(steps, mm=self, **kwargs)
 
     def _call_ranksparse(
         self,
@@ -207,6 +243,7 @@ class DistributedMatmul:
         b_mask: np.ndarray | None = None,
         strategy: str | None = None,
         tune: bool = False,
+        lookahead: int | None = None,
     ) -> jax.Array:
         m, k = a_ranks.shape
         k2, n = b.shape
@@ -216,7 +253,7 @@ class DistributedMatmul:
             )
         plan = self.plan(
             m, k, n, b_mask=b_mask, a_ranks=a_ranks, strategy=strategy,
-            itemsize=b.dtype.itemsize, tune=tune,
+            itemsize=b.dtype.itemsize, tune=tune, lookahead=lookahead,
         )
         (mp, kp), (_, np_) = plan.padded_shapes
         b_p = _pad_to_shape(b, (kp, np_))
@@ -268,7 +305,12 @@ class NonuniformMatmul:
         }
 
     def plan(
-        self, *, a_ranks: np.ndarray | None = None, itemsize: int = 4
+        self,
+        *,
+        a_ranks: np.ndarray | None = None,
+        itemsize: int = 4,
+        lookahead: int | None = None,
+        tune: bool = False,
     ) -> MatmulPlan:
         """The underlying uniform-tile plan for the bucketized product.
 
@@ -284,6 +326,8 @@ class NonuniformMatmul:
                 if a_ranks is not None else None
             ),
             itemsize=itemsize,
+            lookahead=lookahead,
+            tune=tune,
         )
 
     def physical_rank_map(self, logical_ranks: np.ndarray) -> BlockRankMap:
@@ -337,6 +381,8 @@ class NonuniformMatmul:
         b: jax.Array,
         *,
         a_ranks: np.ndarray | None = None,
+        lookahead: int | None = None,
+        tune: bool = False,
     ) -> jax.Array:
         """``a_ranks`` (logical per-block rank map) plans A's physical
         tiles rank-sparse: rank-0 logical blocks are screened out of the
@@ -354,5 +400,7 @@ class NonuniformMatmul:
                 self.physical_rank_map(a_ranks)
                 if a_ranks is not None else None
             ),
+            lookahead=lookahead,
+            tune=tune,
         )
         return self._compact(c_p)

@@ -1,0 +1,1111 @@
+"""Block-sparse tensor contractions lowered to the ``MatmulPlan`` engine.
+
+The paper is "a step towards block-sparse **tensor** computing"; this
+module takes that step.  A binary einsum-style contraction
+``contract("abc,cd->abd", x, y)`` of :class:`BlockSparseTensor` operands
+is executed by
+
+1. parsing the spec into **batch / contracted / free** modes
+   (:func:`parse_contraction`);
+2. **matricizing** each operand — modes merge in *block-lexicographic*
+   order, so every tensor block maps to one contiguous matrix block and
+   the merged dimension carries a real ``core.blocking.Tiling`` (the
+   Kronecker product of the mode tilings, nonuniform whenever any mode
+   is).  Block masks and per-block rank maps matricize by the same
+   reshape, exactly;
+3. executing the matricized product through the shared planner
+   (``core.plan.plan_matmul`` via ``core.api.DistributedMatmul``): dense,
+   masked, rank-sparse (``RankCSR`` factor payloads included) and — when
+   a merged tiling is nonuniform — the bucketized
+   ``core.api.NonuniformMatmul`` adaptation;
+4. un-matricizing C and *inferring its block mask* (live C blocks are
+   exactly the boolean product of the operand masks), so contraction
+   results chain as first-class block-sparse tensors.
+
+Chaining is scheduled jointly: :func:`contract_chain` plans every step,
+materializes the **union task graph** of the consecutive contractions
+(``sched.taskgraph.chain_graphs`` — the C tiles of step ``i`` gate only
+the A-panel broadcasts of step ``i+1`` that read them, the paper's "no
+explicit internodal synchronization lets multiple MMs overlap"),
+simulates it (``sched.simulator``), optionally lets the tuner pick the
+per-step multiple-issue windows jointly (``sched.tuner.tune_chain``),
+and then executes the steps with the chosen windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.core import blocking as bk
+from repro.core.plan import mask_key, rank_key
+from repro.core.sparsity import BlockRankMap, RankCSR
+
+__all__ = [
+    "ContractionSpec",
+    "parse_contraction",
+    "BlockSparseTensor",
+    "matricize_mask",
+    "unmatricize_mask",
+    "merge_tilings",
+    "contract",
+    "contract_chain",
+]
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionSpec:
+    """A parsed binary contraction ``"<x>,<y>-><out>"``.
+
+    * ``batch`` — modes in x, y AND the output (einsum batch dims);
+    * ``contracted`` — modes in x and y but not the output (summed);
+    * ``free_x`` / ``free_y`` — modes of one operand surviving to the
+      output.  Orders are the appearance order in the owning operand
+      (``contracted`` uses x's order; y is transposed to match).
+    """
+
+    x_modes: tuple[str, ...]
+    y_modes: tuple[str, ...]
+    out_modes: tuple[str, ...]
+    batch: tuple[str, ...]
+    contracted: tuple[str, ...]
+    free_x: tuple[str, ...]
+    free_y: tuple[str, ...]
+
+    @property
+    def spec(self) -> str:
+        return (
+            f"{''.join(self.x_modes)},{''.join(self.y_modes)}"
+            f"->{''.join(self.out_modes)}"
+        )
+
+
+def parse_contraction(spec: str) -> ContractionSpec:
+    """Parse ``"abc,cd->abd"`` into batch / contracted / free modes.
+
+    Exactly two inputs and an explicit output are required; a mode may
+    appear at most once per operand (no internal traces), and every
+    output mode must come from an input.  Modes of one input absent from
+    the output would need a sum-reduction and are rejected — this is a
+    *contraction* front-end, not full einsum.
+    """
+    if "->" not in spec:
+        raise ValueError(
+            f"contraction spec {spec!r} needs an explicit output "
+            "('ab,bc->ac'); implicit-output einsum is not supported"
+        )
+    inputs, out = spec.replace(" ", "").split("->")
+    parts = inputs.split(",")
+    if len(parts) != 2:
+        raise ValueError(
+            f"spec {spec!r} must contract exactly two operands, "
+            f"got {len(parts)}"
+        )
+    xm, ym = tuple(parts[0]), tuple(parts[1])
+    om = tuple(out)
+    for name, modes in (("x", xm), ("y", ym), ("output", om)):
+        if len(set(modes)) != len(modes):
+            raise ValueError(
+                f"repeated mode in {name} of {spec!r}: internal traces "
+                "are not supported"
+            )
+        bad = [m for m in modes if not m.isalpha()]
+        if bad:
+            raise ValueError(f"non-letter modes {bad} in {spec!r}")
+    xs, ys, os_ = set(xm), set(ym), set(om)
+    if not os_ <= (xs | ys):
+        raise ValueError(
+            f"output modes {sorted(os_ - xs - ys)} of {spec!r} appear in "
+            "no input"
+        )
+    dropped = sorted((xs ^ ys) - os_)
+    if dropped:
+        raise ValueError(
+            f"modes {dropped} of {spec!r} appear in one input but not the "
+            "output: sum-reductions are not supported"
+        )
+    batch = tuple(m for m in xm if m in ys and m in os_)
+    contracted = tuple(m for m in xm if m in ys and m not in os_)
+    free_x = tuple(m for m in xm if m not in ys)
+    free_y = tuple(m for m in ym if m not in xs)
+    if not contracted:
+        raise ValueError(
+            f"spec {spec!r} contracts no mode (outer products are not "
+            "supported; use a contraction with at least one summed mode)"
+        )
+    return ContractionSpec(
+        x_modes=xm, y_modes=ym, out_modes=om,
+        batch=batch, contracted=contracted,
+        free_x=free_x, free_y=free_y,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the tensor container
+# ---------------------------------------------------------------------------
+
+
+def _as_tiling(t) -> bk.Tiling:
+    if isinstance(t, bk.Tiling):
+        return t
+    return bk.Tiling(tuple(int(s) for s in t))
+
+
+@dataclasses.dataclass
+class BlockSparseTensor:
+    """A dense-stored tensor with per-mode block tilings and block structure.
+
+    * ``data`` — the dense jax/numpy array (``None`` only when
+      ``rank_csr`` supplies a factor payload);
+    * ``tilings`` — one :class:`core.blocking.Tiling` per mode, possibly
+      nonuniform ("physics-driven" extents, paper §4.1);
+    * ``mask`` — optional bool array over the block grid
+      (``tuple(t.num_blocks for t in tilings)``); ``None`` = all blocks
+      present;
+    * ``ranks`` — optional int array over the same grid refining the mask
+      into per-block numerical ranks (0 = screened out); dense-stored, so
+      it drives cost/pruning only (``rank_payload=False`` planning);
+    * ``rank_csr`` — optional factorized payload (2-D tensors only):
+      the operand *is* the factorization, executed through
+      ``execute_rank_plan``.
+    """
+
+    data: object | None
+    tilings: tuple[bk.Tiling, ...]
+    mask: np.ndarray | None = None
+    ranks: np.ndarray | None = None
+    rank_csr: RankCSR | None = None
+
+    def __post_init__(self):
+        self.tilings = tuple(_as_tiling(t) for t in self.tilings)
+        if self.rank_csr is not None:
+            if self.data is not None:
+                raise ValueError(
+                    "pass data=None with a rank_csr payload: the "
+                    "factorization is the tensor (use rank_csr.to_dense())"
+                )
+            if len(self.tilings) != 2:
+                raise ValueError(
+                    "rank_csr payloads are 2-D (matricized) structures; "
+                    f"got {len(self.tilings)} modes"
+                )
+            if self.mask is not None or self.ranks is not None:
+                raise ValueError(
+                    "rank_csr carries its own structure; do not also pass "
+                    "mask/ranks"
+                )
+            want = (
+                self.rank_csr.csr.m_blocks * self.rank_csr.bm,
+                self.rank_csr.csr.n_blocks * self.rank_csr.bk,
+            )
+            if self.shape != want:
+                raise ValueError(
+                    f"tilings extent {self.shape} != rank_csr shape {want}"
+                )
+        elif self.data is None:
+            raise ValueError("data=None requires a rank_csr payload")
+        else:
+            if tuple(self.data.shape) != self.shape:
+                raise ValueError(
+                    f"data shape {tuple(self.data.shape)} != tilings "
+                    f"extents {self.shape}"
+                )
+        if self.mask is not None and self.ranks is not None:
+            raise ValueError("pass either mask or ranks, not both")
+        for name in ("mask", "ranks"):
+            arr = getattr(self, name)
+            if arr is None:
+                continue
+            arr = np.asarray(arr)
+            if arr.shape != self.block_grid:
+                raise ValueError(
+                    f"{name} shape {arr.shape} != block grid "
+                    f"{self.block_grid}"
+                )
+            setattr(
+                self, name,
+                arr.astype(bool if name == "mask" else np.int32),
+            )
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def ndim(self) -> int:
+        return len(self.tilings)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(t.extent for t in self.tilings)
+
+    @property
+    def block_grid(self) -> tuple[int, ...]:
+        return tuple(t.num_blocks for t in self.tilings)
+
+    @property
+    def block_mask(self) -> np.ndarray:
+        """The effective present/absent block mask (all-True if none)."""
+        if self.rank_csr is not None:
+            return self.rank_csr.rank_map().mask
+        if self.ranks is not None:
+            return self.ranks > 0
+        if self.mask is not None:
+            return self.mask
+        return np.ones(self.block_grid, dtype=bool)
+
+    def fill(self) -> float:
+        """Live fraction of *elements* (block areas weighted — on
+        nonuniform tilings this differs from the live-block count)."""
+        if not self.tilings:  # 0-D result of a full contraction
+            return 1.0
+        mask = self.block_mask
+        area = np.asarray(self.tilings[0].sizes, dtype=np.float64)
+        for t in self.tilings[1:]:
+            area = np.multiply.outer(area, np.asarray(t.sizes, np.float64))
+        total = float(area.sum())
+        return float((area * mask).sum() / total) if total else 0.0
+
+    def to_dense(self) -> np.ndarray:
+        """Dense numpy storage with masked blocks zeroed (the oracle view)."""
+        if self.rank_csr is not None:
+            return self.rank_csr.to_dense()
+        data = np.asarray(self.data)
+        if self.mask is None and self.ranks is None:
+            return data
+        fine = expand_block_mask(self.block_mask, self.tilings)
+        return np.where(fine, data, np.zeros((), data.dtype))
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def from_dense(
+        cls,
+        data,
+        tilings=None,
+        *,
+        block_shape: tuple[int, ...] | None = None,
+        mask: np.ndarray | None = None,
+        ranks: np.ndarray | None = None,
+    ) -> "BlockSparseTensor":
+        """Wrap a dense array; ``block_shape`` builds uniform tilings."""
+        if tilings is None:
+            if block_shape is None:
+                tilings = [bk.Tiling((d,)) for d in data.shape]
+            else:
+                tilings = [
+                    bk.uniform_tiling(d, b)
+                    for d, b in zip(data.shape, block_shape)
+                ]
+        return cls(
+            data=data, tilings=tuple(tilings), mask=mask, ranks=ranks
+        )
+
+    @classmethod
+    def from_rank_csr(cls, rank_csr: RankCSR) -> "BlockSparseTensor":
+        """A 2-D tensor whose payload is the factorization itself."""
+        tilings = (
+            bk.uniform_tiling(
+                rank_csr.csr.m_blocks * rank_csr.bm, rank_csr.bm
+            ),
+            bk.uniform_tiling(
+                rank_csr.csr.n_blocks * rank_csr.bk, rank_csr.bk
+            ),
+        )
+        return cls(data=None, tilings=tilings, rank_csr=rank_csr)
+
+
+def _wrap(x) -> BlockSparseTensor:
+    if isinstance(x, BlockSparseTensor):
+        return x
+    if isinstance(x, RankCSR):
+        return BlockSparseTensor.from_rank_csr(x)
+    return BlockSparseTensor.from_dense(x)
+
+
+def expand_block_mask(
+    mask: np.ndarray, tilings: tuple[bk.Tiling, ...]
+) -> np.ndarray:
+    """Element-resolution expansion of a block mask (nonuniform-aware)."""
+    out = np.asarray(mask, dtype=bool)
+    for axis, t in enumerate(tilings):
+        out = np.repeat(out, t.sizes, axis=axis)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# matricization: block-lexicographic mode merging
+# ---------------------------------------------------------------------------
+
+
+def merge_tilings(
+    tilings: tuple[bk.Tiling, ...],
+) -> tuple[bk.Tiling, np.ndarray | None]:
+    """Merge mode tilings into one block-contiguous dimension.
+
+    The natural row-major flatten of merged modes interleaves blocks
+    (element ``(i1, i2)`` ↦ ``i1·E2 + i2`` scatters block ``(b1, b2)``
+    into strided segments).  We instead order the merged dimension
+    *block-lexicographically* — sort key ``(blk_1, …, blk_n, off_1, …,
+    off_n)`` — so every tensor block occupies one contiguous range and
+    the merged dimension is a genuine :class:`Tiling` whose sizes are
+    the products of the per-mode block sizes in lexicographic block
+    order (matching ``mask.reshape(-1)`` on the block grid).
+
+    Returns ``(merged_tiling, perm)`` with ``perm[new] = old_flat_index``
+    into the row-major flatten, or ``perm=None`` when the orders
+    coincide (single mode, or any prefix of modes with one block each).
+    """
+    tilings = tuple(tilings)
+    if not tilings:
+        return bk.Tiling((1,)), None
+    sizes = np.asarray(tilings[0].sizes, dtype=np.int64)
+    for t in tilings[1:]:
+        sizes = np.multiply.outer(sizes, np.asarray(t.sizes, np.int64))
+    merged = bk.Tiling(tuple(int(s) for s in sizes.ravel()))
+    if len(tilings) == 1 or all(
+        t.num_blocks == 1 for t in tilings[1:]
+    ):
+        # trailing modes contribute a single block each, so every merged
+        # block is already a contiguous row-major range
+        return merged, None
+    shape = tuple(t.extent for t in tilings)
+    blk, off = [], []
+    for axis, t in enumerate(tilings):
+        ids = np.repeat(
+            np.arange(t.num_blocks, dtype=np.int64), t.sizes
+        )
+        offs = (
+            np.arange(t.extent, dtype=np.int64)
+            - np.asarray(t.offsets, dtype=np.int64)[ids]
+        )
+        view = [1] * len(shape)
+        view[axis] = -1
+        blk.append(np.broadcast_to(ids.reshape(view), shape).ravel())
+        off.append(np.broadcast_to(offs.reshape(view), shape).ravel())
+    # lexsort: last key is primary -> (blk_1 … blk_n, off_1 … off_n)
+    perm = np.lexsort(tuple(off[::-1]) + tuple(blk[::-1]))
+    if np.array_equal(perm, np.arange(perm.size)):
+        return merged, None
+    return merged, perm
+
+
+def matricize_mask(
+    mask: np.ndarray,
+    modes: tuple[str, ...],
+    row_modes: tuple[str, ...],
+    col_modes: tuple[str, ...],
+) -> np.ndarray:
+    """Reshape a block-grid array to the matricized 2-D block grid.
+
+    Exact by construction: merged tilings order blocks
+    lexicographically, which is precisely the row-major reshape of the
+    transposed block grid.  Works for bool masks and int rank maps.
+    """
+    mask = np.asarray(mask)
+    axes = [modes.index(m) for m in row_modes + col_modes]
+    mt = np.transpose(mask, axes)
+    rows = int(np.prod(mt.shape[: len(row_modes)], dtype=np.int64))
+    return mt.reshape(max(rows, 1), -1)
+
+
+def unmatricize_mask(
+    mask2d: np.ndarray,
+    row_modes: tuple[str, ...],
+    col_modes: tuple[str, ...],
+    grids: dict[str, int],
+    out_modes: tuple[str, ...],
+) -> np.ndarray:
+    """Inverse of :func:`matricize_mask` onto ``out_modes`` order."""
+    shape = tuple(grids[m] for m in row_modes) + tuple(
+        grids[m] for m in col_modes
+    )
+    nd = np.asarray(mask2d).reshape(shape or (1,))
+    if not shape:
+        return nd
+    cur = row_modes + col_modes
+    return np.transpose(nd, [cur.index(m) for m in out_modes])
+
+
+def _apply_perm(arr, perm: np.ndarray | None, axis: int):
+    if perm is None:
+        return arr
+    import jax.numpy as jnp
+
+    return jnp.take(arr, jnp.asarray(perm), axis=axis)
+
+
+def _invert(perm: np.ndarray | None) -> np.ndarray | None:
+    if perm is None:
+        return None
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size)
+    return inv
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class _OperandGeom:
+    """How one operand matricizes: transpose order, merged tilings, perms."""
+
+    axes: tuple[int, ...]  # transpose order: row modes then col modes
+    row_modes: tuple[str, ...]
+    col_modes: tuple[str, ...]
+    row_tiling: bk.Tiling
+    col_tiling: bk.Tiling
+    row_perm: np.ndarray | None
+    col_perm: np.ndarray | None
+
+    def matricize(self, data):
+        import jax.numpy as jnp
+
+        xt = jnp.transpose(jnp.asarray(data), self.axes)
+        x2 = xt.reshape(self.row_tiling.extent, self.col_tiling.extent)
+        x2 = _apply_perm(x2, self.row_perm, 0)
+        return _apply_perm(x2, self.col_perm, 1)
+
+    @property
+    def identity(self) -> bool:
+        """True when matricization is a pure reshape (no data movement)."""
+        return (
+            self.axes == tuple(range(len(self.axes)))
+            and self.row_perm is None
+            and self.col_perm is None
+        )
+
+
+def _operand_geom(
+    modes: tuple[str, ...],
+    tilings: tuple[bk.Tiling, ...],
+    row_modes: tuple[str, ...],
+    col_modes: tuple[str, ...],
+) -> _OperandGeom:
+    tmap = dict(zip(modes, tilings))
+    axes = tuple(modes.index(m) for m in row_modes + col_modes)
+    row_tiling, row_perm = merge_tilings(
+        tuple(tmap[m] for m in row_modes)
+    )
+    col_tiling, col_perm = merge_tilings(
+        tuple(tmap[m] for m in col_modes)
+    )
+    return _OperandGeom(
+        axes=axes, row_modes=row_modes, col_modes=col_modes,
+        row_tiling=row_tiling, col_tiling=col_tiling,
+        row_perm=row_perm, col_perm=col_perm,
+    )
+
+
+# ---------------------------------------------------------------------------
+# one contraction step: geometry + planning + execution
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class _StepGeometry:
+    """Everything static about one contraction: resolved once, cached."""
+
+    spec: ContractionSpec
+    x_geom: _OperandGeom
+    y_geom: _OperandGeom
+    a_mask2: np.ndarray | None  # matricized x mask (None = dense)
+    b_mask2: np.ndarray | None
+    a_ranks2: BlockRankMap | None  # matricized dense-stored rank map
+    uniform: bool  # all three merged tilings uniform
+    out_tilings: tuple[bk.Tiling, ...]
+    out_mask: np.ndarray | None
+    out_row_perm_inv: np.ndarray | None
+    out_col_perm_inv: np.ndarray | None
+    tile: int
+
+
+def _uniform_block(t: bk.Tiling) -> int:
+    return t.sizes[0]
+
+
+def _step_geometry(
+    spec: ContractionSpec,
+    x: BlockSparseTensor,
+    y: BlockSparseTensor,
+    tile: int,
+) -> _StepGeometry:
+    if spec.batch:
+        raise ValueError(
+            "batch modes must be split before matricization "
+            "(contract() handles this)"
+        )
+    if len(spec.x_modes) != x.ndim or len(spec.y_modes) != y.ndim:
+        raise ValueError(
+            f"spec {spec.spec!r} expects {len(spec.x_modes)}-D x / "
+            f"{len(spec.y_modes)}-D y, got {x.ndim}-D / {y.ndim}-D"
+        )
+    xt = dict(zip(spec.x_modes, x.tilings))
+    yt = dict(zip(spec.y_modes, y.tilings))
+    # A structureless operand (no mask/ranks/factors — e.g. a raw array
+    # wrapped with one block per mode) adopts its partner's blocking on
+    # shared modes, so "masked tensor x raw array" just works.
+    x_plain = x.mask is None and x.ranks is None and x.rank_csr is None
+    y_plain = y.mask is None and y.ranks is None and y.rank_csr is None
+    for m in spec.contracted:  # batch modes were split off in contract()
+        if xt[m].sizes == yt[m].sizes:
+            continue
+        if x_plain and xt[m].num_blocks == 1:
+            xt[m] = yt[m]
+        elif y_plain and yt[m].num_blocks == 1:
+            yt[m] = xt[m]
+        else:
+            raise ValueError(
+                f"mode {m!r} tilings disagree between operands: "
+                f"{xt[m].sizes} vs {yt[m].sizes}"
+            )
+    x_geom = _operand_geom(
+        spec.x_modes, tuple(xt[m] for m in spec.x_modes),
+        spec.free_x, spec.contracted,
+    )
+    y_geom = _operand_geom(
+        spec.y_modes, tuple(yt[m] for m in spec.y_modes),
+        spec.contracted, spec.free_y,
+    )
+
+    a_mask2 = b_mask2 = None
+    a_ranks2 = None
+    if x.rank_csr is None:
+        if x.ranks is not None:
+            r2 = matricize_mask(
+                x.ranks, spec.x_modes, spec.free_x, spec.contracted
+            ).astype(np.int32)
+            if (
+                x_geom.row_tiling.is_uniform
+                and x_geom.col_tiling.is_uniform
+            ):
+                a_ranks2 = BlockRankMap(
+                    ranks=r2,
+                    bm=_uniform_block(x_geom.row_tiling),
+                    bk=_uniform_block(x_geom.col_tiling),
+                )
+            else:
+                # nonuniform merged tilings carry the rank map logically
+                a_ranks2 = r2
+        elif x.mask is not None:
+            a_mask2 = matricize_mask(
+                x.mask, spec.x_modes, spec.free_x, spec.contracted
+            )
+    if y.rank_csr is not None:
+        raise NotImplementedError(
+            "rank_csr payloads are supported on the first operand only "
+            "(the planner factors A); densify y or swap the operands"
+        )
+    if y.ranks is not None:
+        raise NotImplementedError(
+            "per-block ranks on the second operand are not supported "
+            "(the planner refines A only); pass a mask instead"
+        )
+    if y.mask is not None:
+        b_mask2 = matricize_mask(
+            y.mask, spec.y_modes, spec.contracted, spec.free_y
+        )
+
+    uniform = (
+        x_geom.row_tiling.is_uniform
+        and x_geom.col_tiling.is_uniform
+        and y_geom.col_tiling.is_uniform
+    )
+
+    # -- output geometry + inferred mask -------------------------------------
+    grids = {m: t.num_blocks for m, t in {**yt, **xt}.items()}
+    out_tilings = tuple(
+        {**yt, **xt}[m] for m in spec.out_modes
+    )
+    xmask = (
+        np.ones(tuple(xt[m].num_blocks for m in spec.x_modes), bool)
+        if x_plain else x.block_mask
+    )
+    ymask = (
+        np.ones(tuple(yt[m].num_blocks for m in spec.y_modes), bool)
+        if y_plain else y.block_mask
+    )
+    if x_plain and y_plain:
+        out_mask = None
+    else:
+        am = matricize_mask(
+            xmask, spec.x_modes, spec.free_x, spec.contracted
+        ).astype(np.int64)
+        bm = matricize_mask(
+            ymask, spec.y_modes, spec.contracted, spec.free_y
+        ).astype(np.int64)
+        cm2 = (am @ bm) > 0
+        out_mask = unmatricize_mask(
+            cm2, spec.free_x, spec.free_y, grids, spec.out_modes
+        )
+    return _StepGeometry(
+        spec=spec,
+        x_geom=x_geom,
+        y_geom=y_geom,
+        a_mask2=a_mask2,
+        b_mask2=b_mask2,
+        a_ranks2=a_ranks2,
+        uniform=uniform,
+        out_tilings=out_tilings,
+        out_mask=out_mask,
+        out_row_perm_inv=_invert(x_geom.row_perm),
+        out_col_perm_inv=_invert(y_geom.col_perm),
+        tile=tile,
+    )
+
+
+def _tensor_key(t: BlockSparseTensor) -> tuple:
+    """Structural cache key: tilings + mask/rank content digests (the
+    data itself never keys the geometry)."""
+    return (
+        tuple(tt.sizes for tt in t.tilings),
+        mask_key(t.mask),
+        None if t.ranks is None else (t.ranks.shape, t.ranks.tobytes()),
+        rank_key(t.rank_csr),
+    )
+
+
+def _geometry_cached(mm, spec_str: str, x, y, tile: int) -> _StepGeometry:
+    cache = getattr(mm, "_contract_cache", None)
+    spec = parse_contraction(spec_str)
+    if cache is None:
+        return _step_geometry(spec, x, y, tile)
+    key = (spec.spec, _tensor_key(x), _tensor_key(y), tile)
+    geom = cache.get(key)
+    if geom is None:
+        geom = _step_geometry(spec, x, y, tile)
+        cache[key] = geom
+    return geom
+
+
+def _nonuniform_front_end(mm, geom: _StepGeometry):
+    """The bucketized adaptation for nonuniform merged tilings (cached)."""
+    from repro.core.api import NonuniformMatmul
+
+    cache = getattr(mm, "_contract_cache", None)
+    key = (
+        "nmm",
+        geom.x_geom.row_tiling.sizes,
+        geom.x_geom.col_tiling.sizes,
+        geom.y_geom.col_tiling.sizes,
+        geom.tile,
+    )
+    nmm = cache.get(key) if cache is not None else None
+    if nmm is None:
+        nmm = NonuniformMatmul(
+            mm,
+            geom.x_geom.row_tiling,
+            geom.x_geom.col_tiling,
+            geom.y_geom.col_tiling,
+            tile=geom.tile,
+        )
+        if cache is not None:
+            cache[key] = nmm
+    return nmm
+
+
+def _nonuniform_rank_map(geom: _StepGeometry, x: BlockSparseTensor):
+    """Logical rank map feeding ``NonuniformMatmul`` pruning: explicit
+    ranks pass through; a plain mask rides as full-rank-where-present
+    (``physical_rank_map`` clamps to the tile extents)."""
+    if geom.a_ranks2 is not None:
+        r = geom.a_ranks2
+        return np.asarray(r.ranks if isinstance(r, BlockRankMap) else r)
+    if geom.a_mask2 is not None:
+        return np.where(geom.a_mask2, np.int32(2**30), np.int32(0))
+    if x.rank_csr is not None:
+        raise NotImplementedError(
+            "rank_csr payloads need uniform merged tilings; densify the "
+            "operand for nonuniform mode extents"
+        )
+    return None
+
+
+def _plan_step(mm, geom: _StepGeometry, x: BlockSparseTensor, itemsize=4):
+    """The MatmulPlan this step will execute (for chain scheduling)."""
+    m = geom.x_geom.row_tiling.extent
+    k = geom.x_geom.col_tiling.extent
+    n = geom.y_geom.col_tiling.extent
+    if not geom.uniform:
+        nmm = _nonuniform_front_end(mm, geom)
+        return nmm.plan(
+            a_ranks=_nonuniform_rank_map(geom, x), itemsize=itemsize
+        )
+    if x.rank_csr is not None:
+        return mm.plan(
+            m, k, n, b_mask=geom.b_mask2, a_ranks=x.rank_csr,
+            itemsize=itemsize,
+        )
+    a_ranks = geom.a_ranks2 if isinstance(
+        geom.a_ranks2, BlockRankMap
+    ) else None
+    return mm.plan(
+        m, k, n, a_mask=geom.a_mask2, b_mask=geom.b_mask2,
+        a_ranks=a_ranks, itemsize=itemsize,
+    )
+
+
+def _execute_step(
+    mm,
+    geom: _StepGeometry,
+    x: BlockSparseTensor,
+    y: BlockSparseTensor,
+    *,
+    lookahead: int | None = None,
+    tune: bool = False,
+):
+    """Matricize, multiply through the planner, un-matricize."""
+    import jax.numpy as jnp
+
+    b2 = geom.y_geom.matricize(y.data)
+    if not geom.uniform:
+        # Bucketized path: masks are applied elementwise (exact — pad and
+        # dead blocks are zero) and x's structure rides as the logical
+        # rank map so screened blocks still prune the physical plan.
+        a = x.data
+        if x.rank_csr is not None:
+            raise NotImplementedError(
+                "rank_csr payloads need uniform merged tilings"
+            )
+        if x.mask is not None or x.ranks is not None:
+            a = a * jnp.asarray(
+                expand_block_mask(x.block_mask, x.tilings), a.dtype
+            )
+        if y.mask is not None:
+            y_fine = expand_block_mask(y.block_mask, y.tilings)
+            y_fine = matricize_mask_elements(y_fine, geom.y_geom)
+            b2 = b2 * jnp.asarray(y_fine, b2.dtype)
+        a2 = geom.x_geom.matricize(a)
+        nmm = _nonuniform_front_end(mm, geom)
+        c2 = nmm(
+            a2, b2, a_ranks=_nonuniform_rank_map(geom, x),
+            lookahead=lookahead, tune=tune,
+        )
+    elif x.rank_csr is not None:
+        if not geom.x_geom.identity:
+            raise NotImplementedError(
+                f"spec {geom.spec.spec!r} transposes/permutes the "
+                "rank_csr operand; factors cannot be re-laid-out — "
+                "densify with rank_csr.to_dense() first"
+            )
+        c2 = mm(
+            None, b2, a_ranks=x.rank_csr, b_mask=geom.b_mask2,
+            lookahead=lookahead, tune=tune,
+        )
+    else:
+        a2 = geom.x_geom.matricize(x.data)
+        a_ranks = geom.a_ranks2 if isinstance(
+            geom.a_ranks2, BlockRankMap
+        ) else None
+        c2 = mm(
+            a2, b2,
+            a_mask=geom.a_mask2 if a_ranks is None else None,
+            b_mask=geom.b_mask2, a_ranks=a_ranks,
+            lookahead=lookahead, tune=tune,
+        )
+    # un-matricize: undo block-lex perms, split merged modes, reorder
+    c2 = _apply_perm(c2, geom.out_row_perm_inv, 0)
+    c2 = _apply_perm(c2, geom.out_col_perm_inv, 1)
+    spec = geom.spec
+    fx_ext = tuple(
+        dict(zip(spec.x_modes, x.tilings))[m].extent for m in spec.free_x
+    )
+    fy_ext = tuple(
+        dict(zip(spec.y_modes, y.tilings))[m].extent for m in spec.free_y
+    )
+    c_nd = c2.reshape(fx_ext + fy_ext or (1,))
+    cur = spec.free_x + spec.free_y
+    if cur:
+        c_nd = jnp.transpose(
+            c_nd, [cur.index(m) for m in spec.out_modes]
+        )
+    return c_nd
+
+
+def matricize_mask_elements(fine: np.ndarray, geom: _OperandGeom):
+    """Element-resolution companion of ``_OperandGeom.matricize`` for
+    numpy masks (transpose + reshape + block-lex perms)."""
+    mt = np.transpose(fine, geom.axes)
+    m2 = mt.reshape(geom.row_tiling.extent, geom.col_tiling.extent)
+    if geom.row_perm is not None:
+        m2 = m2[geom.row_perm]
+    if geom.col_perm is not None:
+        m2 = m2[:, geom.col_perm]
+    return m2
+
+
+# ---------------------------------------------------------------------------
+# the public entry points
+# ---------------------------------------------------------------------------
+
+
+def contract(
+    spec: str,
+    x,
+    y,
+    *,
+    mm,
+    tile: int = 64,
+    lookahead: int | None = None,
+    tune: bool = False,
+) -> BlockSparseTensor:
+    """Binary block-sparse tensor contraction through the MatmulPlan engine.
+
+    ``x``/``y`` are :class:`BlockSparseTensor` (plain arrays and
+    ``RankCSR`` payloads are wrapped automatically); ``mm`` is the
+    :class:`core.api.DistributedMatmul` supplying the mesh, strategy and
+    plan cache.  Batch modes execute one matricized product per batch
+    element (every slice shares one cached plan).  Returns a
+    :class:`BlockSparseTensor` whose mask is *inferred* from the operand
+    structure (exactly the reachable C blocks), ready to chain.
+    """
+    import jax.numpy as jnp
+
+    x, y = _wrap(x), _wrap(y)
+    pspec = parse_contraction(spec)
+    if not pspec.batch:
+        geom = _geometry_cached(mm, spec, x, y, tile)
+        data = _execute_step(
+            mm, geom, x, y, lookahead=lookahead, tune=tune
+        )
+        if not pspec.out_modes:  # full contraction to a scalar
+            return BlockSparseTensor(
+                data=data.reshape(()), tilings=(), mask=None
+            )
+        return BlockSparseTensor(
+            data=data, tilings=geom.out_tilings, mask=geom.out_mask
+        )
+
+    # -- batch modes: one matricized product per batch element ---------------
+    if x.rank_csr is not None:
+        raise NotImplementedError("batch modes with rank_csr payloads")
+    sub_spec = (
+        "".join(m for m in pspec.x_modes if m not in pspec.batch)
+        + ","
+        + "".join(m for m in pspec.y_modes if m not in pspec.batch)
+        + "->"
+        + "".join(m for m in pspec.out_modes if m not in pspec.batch)
+    )
+    bx = [pspec.x_modes.index(m) for m in pspec.batch]
+    by = [pspec.y_modes.index(m) for m in pspec.batch]
+    xt = dict(zip(pspec.x_modes, x.tilings))
+    yt = dict(zip(pspec.y_modes, y.tilings))
+    # Batch slices index elements, but masks/ranks slice by *block* —
+    # block indices come from the resolved batch tilings, so the two
+    # operands must agree on them wherever block-granular structure is
+    # actually sliced; a plain side adopts the structured side's
+    # blocking (only extents must always match).
+    x_plain = x.mask is None and x.ranks is None
+    y_plain = y.mask is None and y.ranks is None
+    batch_tilings = []
+    for m in pspec.batch:
+        if xt[m].extent != yt[m].extent:
+            raise ValueError(
+                f"batch mode {m!r} extents disagree between operands: "
+                f"{xt[m].extent} vs {yt[m].extent}"
+            )
+        if xt[m].sizes == yt[m].sizes or y_plain:
+            batch_tilings.append(xt[m])
+        elif x_plain:
+            batch_tilings.append(yt[m])
+        else:
+            raise ValueError(
+                f"batch mode {m!r} tilings disagree between operands "
+                f"({xt[m].sizes} vs {yt[m].sizes}); masked/ranked "
+                "operands must block batch modes identically"
+            )
+    extents = [t.extent for t in batch_tilings]
+    # element -> owning block per batch mode (for mask slicing)
+    blk_of = [
+        np.repeat(np.arange(t.num_blocks), t.sizes) for t in batch_tilings
+    ]
+
+    def _slice(t: BlockSparseTensor, baxes, idx, bblk):
+        other = [i for i in range(t.ndim) if i not in baxes]
+        data = jnp.asarray(t.data)
+        for ax, i in sorted(zip(baxes, idx), reverse=True):
+            data = jnp.take(data, i, axis=ax)
+        sub_mask = sub_ranks = None
+        for name in ("mask", "ranks"):
+            arr = getattr(t, name)
+            if arr is None:
+                continue
+            sl = [slice(None)] * t.ndim
+            for ax, b in zip(baxes, bblk):
+                sl[ax] = b
+            val = arr[tuple(sl)]
+            if name == "mask":
+                sub_mask = val
+            else:
+                sub_ranks = val
+        return BlockSparseTensor(
+            data=data,
+            tilings=tuple(t.tilings[i] for i in other),
+            mask=sub_mask,
+            ranks=sub_ranks,
+        )
+
+    out_free = tuple(m for m in pspec.out_modes if m not in pspec.batch)
+    slices = []
+    masks: dict[tuple, np.ndarray | None] = {}
+    for idx in itertools.product(*[range(e) for e in extents]):
+        bblk = tuple(int(blk_of[d][i]) for d, i in enumerate(idx))
+        xs = _slice(x, bx, idx, bblk)
+        ys = _slice(y, by, idx, bblk)
+        out = contract(
+            sub_spec, xs, ys, mm=mm, tile=tile,
+            lookahead=lookahead, tune=tune,
+        )
+        slices.append(out.data)
+        if bblk not in masks:
+            masks[bblk] = out.mask
+    out_t = out  # the last sub-result: free tilings/grid template
+    stacked = jnp.stack(slices).reshape(
+        tuple(extents) + tuple(tt.extent for tt in out_t.tilings)
+    )
+    cur = pspec.batch + out_free
+    c_nd = jnp.transpose(
+        stacked, [cur.index(m) for m in pspec.out_modes]
+    )
+    out_mask = None
+    if any(v is not None for v in masks.values()):
+        bgrids = tuple(t.num_blocks for t in batch_tilings)
+        free_grid = tuple(
+            dict(zip(out_free, out_t.tilings))[m].num_blocks
+            for m in out_free
+        ) if out_free else ()
+        full = np.zeros(bgrids + free_grid, dtype=bool)
+        for bblk, msk in masks.items():
+            full[bblk] = True if msk is None else msk
+        full = np.transpose(
+            full, [cur.index(m) for m in pspec.out_modes]
+        )
+        out_mask = full
+    tmap = {**dict(zip(pspec.batch, batch_tilings)),
+            **dict(zip(out_free, out_t.tilings))}
+    return BlockSparseTensor(
+        data=c_nd,
+        tilings=tuple(tmap[m] for m in pspec.out_modes),
+        mask=out_mask,
+    )
+
+
+def contract_chain(
+    steps,
+    *,
+    mm,
+    tile: int = 64,
+    tune: bool = False,
+    machine=None,
+    trace: bool = False,
+):
+    """Execute consecutive contractions under one *jointly scheduled* plan.
+
+    ``steps`` is ``[(spec0, x0, y0), (spec1, y1), (spec2, y2), …]`` —
+    each later step contracts the previous result (as its first operand)
+    with a fresh second operand.  Before executing anything the chain is
+    planned end to end: per-step ``MatmulPlan``s (operand masks propagate
+    through the inferred output masks), the **union task graph** of all
+    steps (``sched.taskgraph.chain_graphs``: C tiles of step *i* gate
+    only the A-panel broadcasts of step *i+1* that read them — B-side
+    broadcasts and early panels overlap the previous multiplication),
+    and a discrete-event simulation of it.  ``tune=True`` lets
+    ``sched.tuner.tune_chain`` pick the per-step multiple-issue windows
+    jointly by simulated makespan; execution then honors the chosen
+    windows.
+
+    Returns ``(result, report)``: the final :class:`BlockSparseTensor`
+    and a dict with the joint / sequential simulated makespans, the
+    speedup, per-step lookaheads and plan summaries (and the traced
+    ``SimResult`` as ``report["sim"]`` when ``trace=True``).
+    """
+    from repro.sched.simulator import DEFAULT_MACHINE, simulate
+    from repro.sched.taskgraph import chain_graphs, from_plan
+    from repro.sched.tuner import tune_chain
+
+    machine = machine or DEFAULT_MACHINE
+    if len(steps) < 2:
+        raise ValueError("contract_chain needs at least two steps")
+    spec0, x0, y0 = steps[0]
+    norm = [(parse_contraction(spec0), _wrap(x0), _wrap(y0))]
+    for item in steps[1:]:
+        spec_i, y_i = item
+        norm.append((parse_contraction(spec_i), None, _wrap(y_i)))
+    for spec, _x, _y in norm:
+        if spec.batch:
+            raise NotImplementedError(
+                "joint chain scheduling supports non-batch specs only"
+            )
+
+    # -- phase 1: symbolic pass (geometry + plans, no data) -----------------
+    geoms = []
+    plans = []
+    x_cur = norm[0][1]
+    for spec, _x, y in norm:
+        geom = _geometry_cached(mm, spec.spec, x_cur, y, tile)
+        geoms.append(geom)
+        plans.append(_plan_step(mm, geom, x_cur))
+        x_cur = _symbolic_out(geom)  # structure only; data comes in phase 3
+
+    # -- phase 2: union graph, simulation, joint window tuning ---------------
+    builders = [
+        (lambda la, p=p: from_plan(p, lookahead=la)) for p in plans
+    ]
+    default_graphs = [b(None) for b in builders]
+    seq_sims = [simulate(g, machine) for g in default_graphs]
+    sequential = float(sum(s.makespan_s for s in seq_sims))
+    tuned_record = None
+    if tune:
+        lookaheads, joint, tuned_record = tune_chain(
+            builders, machine=machine, default_graphs=default_graphs
+        )
+        joint_default_s = tuned_record["default_makespan_s"]
+        if trace:  # re-simulate the winner only to record spans
+            joint = simulate(
+                chain_graphs(
+                    [b(la) for b, la in zip(builders, lookaheads)]
+                ),
+                machine, trace=True,
+            )
+    else:
+        lookaheads = [g.lookahead for g in default_graphs]
+        joint = simulate(chain_graphs(default_graphs), machine, trace=trace)
+        joint_default_s = joint.makespan_s
+
+    # -- phase 3: execute with the chosen per-step windows --------------------
+    x_cur = norm[0][1]
+    for (spec, _x, y), geom, la in zip(norm, geoms, lookaheads):
+        data = _execute_step(mm, geom, x_cur, y, lookahead=int(la))
+        x_cur = BlockSparseTensor(
+            data=data, tilings=geom.out_tilings, mask=geom.out_mask
+        )
+
+    report = {
+        "steps": [g.spec.spec for g in geoms],
+        "lookaheads": [int(la) for la in lookaheads],
+        "joint_makespan_s": joint.makespan_s,
+        "joint_default_makespan_s": joint_default_s,
+        "sequential_makespan_s": sequential,
+        "sequential_makespans_s": [s.makespan_s for s in seq_sims],
+        "speedup_vs_sequential": (
+            sequential / joint.makespan_s if joint.makespan_s > 0 else 1.0
+        ),
+        "plans": [p.summary() for p in plans],
+        "tuned": tuned_record,
+    }
+    if trace:
+        report["sim"] = joint
+    return x_cur, report
+
+
+def _symbolic_out(geom: _StepGeometry) -> BlockSparseTensor:
+    """A data-free stand-in carrying the step's output structure (used by
+    the chain's symbolic planning pass)."""
+    t = BlockSparseTensor.__new__(BlockSparseTensor)
+    t.data = None
+    t.tilings = geom.out_tilings
+    t.mask = geom.out_mask
+    t.ranks = None
+    t.rank_csr = None
+    return t

@@ -27,11 +27,17 @@ from repro.sched.taskgraph import (
     Task,
     TaskGraph,
     abstract_summa_config,
+    chain_graphs,
     eq1_lookahead,
     from_plan,
     from_tilings,
 )
-from repro.sched.tuner import lookahead_candidates, ring_makespan, tune_plan
+from repro.sched.tuner import (
+    lookahead_candidates,
+    ring_makespan,
+    tune_chain,
+    tune_plan,
+)
 
 __all__ = [
     "DEFAULT_MACHINE",
@@ -42,10 +48,12 @@ __all__ = [
     "Task",
     "TaskGraph",
     "abstract_summa_config",
+    "chain_graphs",
     "eq1_lookahead",
     "from_plan",
     "from_tilings",
     "lookahead_candidates",
     "ring_makespan",
+    "tune_chain",
     "tune_plan",
 ]

@@ -37,6 +37,7 @@ __all__ = [
     "TaskGraph",
     "from_plan",
     "from_tilings",
+    "chain_graphs",
     "abstract_summa_config",
     "eq1_lookahead",
 ]
@@ -328,12 +329,17 @@ def from_plan(
         plan.cfg.strategy if plan.local_impl == "dense" else "taskbased"
     )
     b = _Builder(p_row, p_col)
+    # Grid column owning each emitted iteration's A panel (contiguous
+    # panel schedule, same arithmetic as summa._panel_slices) — the chain
+    # builder uses this to wire C(step i) -> bcast_a(step i+1) edges.
+    t_a = max(plan.k_steps // p_col, 1)
     meta = {
         "source": "plan",
         "strategy": strategy,
         "shape": [plan.m, plan.k, plan.n],
         "grid": [p_row, p_col],
         "local_impl": plan.local_impl,
+        "a_owner": [int(kk // t_a) for kk in steps],
     }
 
     if strategy == "allgather":
@@ -507,6 +513,8 @@ def from_tilings(
             "shape": [int(rows.sum()), int(inner.sum()), int(cols.sum())],
             "grid": [p_row, p_col],
             "lookahead": window,
+            # cyclic embedding: inner block t's A panel lives on column t%p
+            "a_owner": [t % p_col for t in range(n_steps)],
             "static_imbalance": imbalance,
             "uniform": bool(
                 row_tiling.is_uniform
@@ -515,6 +523,98 @@ def from_tilings(
             ),
         },
     )
+
+
+# ---------------------------------------------------------------------------
+# builder 3: the union graph of chained multiplications
+# ---------------------------------------------------------------------------
+
+
+def chain_graphs(graphs: list[TaskGraph]) -> TaskGraph:
+    """Union task DAG of consecutive multiplications ``C_i = C_{i-1} @ B_i``.
+
+    The paper's observation that "no explicit internodal synchronization
+    lets multiple MMs overlap" realised as edges: instead of a global
+    barrier between steps, the C tile each A-panel broadcast of step
+    ``i+1`` *reads* gates only that broadcast — the dependency is the
+    final ``accum`` of the owning device (grid row of the broadcast
+    group x the panel's owner column, ``meta["a_owner"]``).  B-side
+    broadcasts of step ``i+1`` touch fresh operands and carry no
+    cross-step edges at all, so they (and early A panels) overlap the
+    tail of step ``i``.
+
+    On a single-column grid A panels need no broadcast (the local C rows
+    *are* the next operand): the first ``gemm`` per device takes the
+    cross edge instead.  ``gather_a`` tasks (allgather strategy) read the
+    whole row of C shards and depend on every accum in their group.
+
+    The simulated makespan of the union graph is never worse than the
+    sum of the per-step makespans: resource-free times and cross-step
+    dependency finishes after step ``i`` are bounded by step ``i``'s
+    barrier-synchronized finish, inductively.
+    """
+    if not graphs:
+        raise ValueError("chain_graphs needs at least one graph")
+    p_row, p_col = graphs[0].p_row, graphs[0].p_col
+    for g in graphs[1:]:
+        if (g.p_row, g.p_col) != (p_row, p_col):
+            raise ValueError(
+                "all chained graphs must share one device grid; got "
+                f"{(p_row, p_col)} and {(g.p_row, g.p_col)}"
+            )
+    b = _Builder(p_row, p_col)
+    last_accum: dict[int, int] = {}  # device -> last accum tid so far
+    for s, g in enumerate(graphs):
+        offset = len(b.tasks)
+        a_owner = g.meta.get("a_owner")
+        cur_accum: dict[int, int] = {}
+        linked_gemm: set[int] = set()
+        for task, deps in zip(g.tasks, g.deps):
+            new_deps = [d + offset for d in deps]
+            if s > 0:
+                if task.kind == "bcast_a":
+                    if a_owner is None:
+                        raise ValueError(
+                            "chained graph lacks meta['a_owner'] for its "
+                            "A-panel broadcasts"
+                        )
+                    row = task.devices[0] // p_col
+                    owner_dev = row * p_col + int(a_owner[task.step])
+                    if owner_dev in last_accum:
+                        new_deps.append(last_accum[owner_dev])
+                elif task.kind == "gather_a":
+                    new_deps.extend(
+                        last_accum[d] for d in task.devices
+                        if d in last_accum
+                    )
+                elif task.kind == "gemm" and p_col == 1:
+                    d = task.devices[0]
+                    if d not in linked_gemm and d in last_accum:
+                        new_deps.append(last_accum[d])
+                        linked_gemm.add(d)
+            tid = b.add(
+                task.kind, task.step, task.devices, task.resource,
+                deps=new_deps, flops=task.flops, bytes=task.bytes,
+            )
+            if task.kind == "accum":
+                for d in task.devices:
+                    cur_accum[d] = tid
+        last_accum = {**last_accum, **cur_accum}
+    graph = b.graph(
+        sum(g.n_steps for g in graphs),
+        max(g.lookahead for g in graphs),
+        {
+            "source": "chain",
+            "strategy": "taskbased",
+            "grid": [p_row, p_col],
+            "n_chain_steps": len(graphs),
+            "lookahead": [int(g.lookahead) for g in graphs],
+            "per_step": [dict(g.meta) for g in graphs],
+            "shape": [list(g.meta.get("shape", [])) for g in graphs],
+        },
+    )
+    graph.validate()
+    return graph
 
 
 def eq1_lookahead(p_row: int, p_col: int, k_steps: int) -> int:

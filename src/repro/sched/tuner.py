@@ -32,7 +32,12 @@ from repro.sched.simulator import (
 )
 from repro.sched.taskgraph import eq1_lookahead, from_plan
 
-__all__ = ["tune_plan", "ring_makespan", "lookahead_candidates"]
+__all__ = [
+    "tune_plan",
+    "tune_chain",
+    "ring_makespan",
+    "lookahead_candidates",
+]
 
 #: strategies the tuner may select for plan execution
 TUNABLE_STRATEGIES = ("procedural", "taskbased", "allgather")
@@ -154,6 +159,94 @@ def tune_plan(
     return dataclasses.replace(
         win_plan, cfg=tuned_cfg, lookahead=int(win_la), tuned=info
     )
+
+
+def tune_chain(
+    builders,
+    *,
+    machine: MachineModel = DEFAULT_MACHINE,
+    max_evals: int = 256,
+    default_graphs=None,
+):
+    """Pick the per-step multiple-issue windows of a chained
+    multiplication *jointly* by simulated makespan of the union graph.
+
+    ``builders`` is one callable per chain step, ``lookahead ->
+    TaskGraph`` (``None`` = the step's Eq.-(1) default); the union is
+    assembled by ``taskgraph.chain_graphs``, so cross-step overlap is
+    part of what the search sees — a window that is optimal for a step
+    in isolation can lose to one that drains its tail earlier and
+    unblocks the next step's A-panel broadcasts.
+
+    The full candidate product is searched when it fits in
+    ``max_evals`` simulations; beyond that each step keeps its
+    isolated-best window (greedy fallback).  The default (Eq.-1) windows
+    are always a candidate, so the tuned chain is never worse than the
+    untuned one in simulated makespan.
+
+    ``default_graphs`` accepts the per-step default (Eq.-1) graphs if the
+    caller already built them, avoiding a duplicate materialization.
+    Returns ``(lookaheads, sim, record)``.
+    """
+    import itertools
+
+    from repro.sched.taskgraph import chain_graphs
+
+    defaults = (
+        default_graphs if default_graphs is not None
+        else [b(None) for b in builders]
+    )
+    default_las = [g.lookahead for g in defaults]
+    cand_lists = [
+        lookahead_candidates(g.p_row, g.p_col, g.n_steps) for g in defaults
+    ]
+    for las, g in zip(cand_lists, defaults):
+        if g.lookahead not in las:
+            las.append(g.lookahead)
+    total = math.prod(len(c) for c in cand_lists)
+    if total <= max_evals:
+        combos = itertools.product(*cand_lists)
+    else:
+        # greedy fallback: each step keeps its isolated-best window, and
+        # the all-defaults combo rides along — two chain evaluations
+        # regardless of chain length (the per-step probe sims are linear
+        # in the number of steps, never a product).
+        bests = []
+        for b, g in zip(builders, defaults):
+            las = lookahead_candidates(g.p_row, g.p_col, g.n_steps)
+            bests.append(min(
+                las, key=lambda la: simulate(b(la), machine).makespan_s
+            ))
+        combos = [tuple(default_las), tuple(bests)]
+    best = None  # (makespan, order, las, sim)
+    n_evals = 0
+    default_key = tuple(default_las)
+    default_sim = None
+    for las in combos:
+        graph = chain_graphs([b(la) for b, la in zip(builders, las)])
+        sim = simulate(graph, machine)
+        n_evals += 1
+        if tuple(las) == default_key:
+            default_sim = sim  # the default combo is always a candidate
+        key = (sim.makespan_s, n_evals)
+        if best is None or key < (best[0], best[1]):
+            best = (sim.makespan_s, n_evals, las, sim)
+    _, _, win_las, win_sim = best
+    if default_sim is None:  # defensive: candidates lists were customized
+        default_sim = simulate(chain_graphs(defaults), machine)
+    record = {
+        "lookaheads": [int(la) for la in win_las],
+        "default_lookaheads": [int(la) for la in default_las],
+        **_sim_summary(win_sim),
+        "default_makespan_s": default_sim.makespan_s,
+        "speedup_vs_default": (
+            default_sim.makespan_s / win_sim.makespan_s
+            if win_sim.makespan_s > 0 else 1.0
+        ),
+        "n_candidates": n_evals,
+        "machine": machine.name,
+    }
+    return list(win_las), win_sim, record
 
 
 def ring_makespan(

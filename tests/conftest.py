@@ -183,6 +183,139 @@ def check_case(case: dict, got: np.ndarray, label: str = "") -> None:
     )
 
 
+# ---------------------------------------------------------------------------
+# Contraction differential oracle (repro.contract vs float64 np.einsum)
+#
+# One case builder + one runner, shared between the in-process 1x1 sweep
+# and the real-mesh subprocess sweeps, mirroring the matmul oracle above.
+# ---------------------------------------------------------------------------
+
+#: every contraction family the front-end claims to absorb
+CONTRACT_SPECS = (
+    "matmul",            # ab,bc->ac       pure matmul, masks both sides
+    "free2",             # abc,cd->abd     merged free modes on x
+    "multi_contracted",  # abc,bcd->ad     two contracted modes merge
+    "transpose",         # ab,ca->cb       both operands need transposes
+    "batch",             # sab,sbc->sac    true einsum batch mode
+    "rank_sparse",       # ab,bc->ac       x is a RankCSR factor payload
+    "nonuniform",        # ab,bc->ac       nonuniform mode extents + x mask
+)
+
+
+def contract_case(name: str, *, seed: int = 0) -> dict:
+    """Build one contraction oracle case: operands (as
+    ``BlockSparseTensor``), the spec, and the float64 ``np.einsum``
+    reference of the structure-zeroed operands."""
+    import jax.numpy as jnp
+
+    from repro.core import (
+        BlockSparseTensor,
+        banded_block_mask,
+        decay_rank_map,
+        nonuniform_tiling,
+        synthesize_rank_csr,
+    )
+
+    rng = np.random.default_rng(seed)
+
+    def dense(shape, block_shape, mask=None):
+        data = rng.normal(size=shape).astype(np.float32)
+        return BlockSparseTensor.from_dense(
+            jnp.asarray(data), block_shape=block_shape, mask=mask
+        )
+
+    tile = 64
+    if name == "matmul":
+        spec = "ab,bc->ac"
+        x = dense((64, 96), (16, 12), mask=banded_block_mask(4, 8, 2))
+        y = dense((96, 80), (12, 20), mask=rng.random((8, 4)) < 0.6)
+    elif name == "free2":
+        spec = "abc,cd->abd"
+        x = dense((8, 16, 96), (4, 8, 12), mask=rng.random((2, 2, 8)) < 0.6)
+        y = dense((96, 80), (12, 20), mask=rng.random((8, 4)) < 0.7)
+    elif name == "multi_contracted":
+        spec = "abc,bcd->ad"
+        x = dense((64, 8, 24), (16, 4, 6), mask=rng.random((4, 2, 4)) < 0.7)
+        y = dense((8, 24, 40), (4, 6, 20))
+    elif name == "transpose":
+        spec = "ab,ca->cb"
+        x = dense((64, 48), (16, 12), mask=rng.random((4, 4)) < 0.7)
+        y = dense((40, 64), (20, 16), mask=rng.random((2, 4)) < 0.7)
+    elif name == "batch":
+        spec = "sab,sbc->sac"
+        x = dense((4, 16, 24), (2, 8, 6), mask=rng.random((2, 2, 4)) < 0.6)
+        y = dense((4, 24, 32), (2, 6, 8))
+    elif name == "rank_sparse":
+        spec = "ab,bc->ac"
+        rank_map = decay_rank_map(4, 8, 16, 12, max_rank=4, decay=0.6)
+        x = BlockSparseTensor.from_rank_csr(
+            synthesize_rank_csr(rank_map, seed=seed + 3)
+        )
+        y = dense((96, 80), (12, 20), mask=rng.random((8, 4)) < 0.7)
+    elif name == "nonuniform":
+        spec = "ab,bc->ac"
+        rt = nonuniform_tiling(70, 5, seed=seed + 1)
+        it = nonuniform_tiling(90, 6, seed=seed + 2)
+        ct = nonuniform_tiling(60, 4, seed=seed + 3)
+        x = BlockSparseTensor(
+            data=jnp.asarray(rng.normal(size=(70, 90)).astype(np.float32)),
+            tilings=(rt, it),
+            mask=rng.random((5, 6)) < 0.7,
+        )
+        y = BlockSparseTensor(
+            data=jnp.asarray(rng.normal(size=(90, 60)).astype(np.float32)),
+            tilings=(it, ct),
+        )
+        tile = 16
+    else:
+        raise ValueError(f"unknown contraction family {name!r}")
+    ref = np.einsum(
+        spec,
+        x.to_dense().astype(np.float64),
+        y.to_dense().astype(np.float64),
+    )
+    return {"family": name, "spec": spec, "x": x, "y": y, "ref": ref,
+            "tile": tile}
+
+
+def run_contract(case: dict, mesh, *, row_axis="data",
+                 col_axis="model") -> np.ndarray:
+    """Execute one contraction case on ``mesh`` through the front-end."""
+    from repro.core import DistributedMatmul
+
+    mm = DistributedMatmul(
+        mesh, row_axis=row_axis, col_axis=col_axis, strategy="taskbased"
+    )
+    out = mm.contract(
+        case["spec"], case["x"], case["y"], tile=case["tile"]
+    )
+    return np.asarray(out.data)
+
+
+def check_contract_case(case: dict, got: np.ndarray, label: str = "") -> None:
+    np.testing.assert_allclose(
+        got, case["ref"], atol=ORACLE_ATOL, rtol=ORACLE_RTOL,
+        err_msg=f"contraction oracle mismatch: {label or case['family']}",
+    )
+
+
+#: the contraction subprocess sweep body — one grid per subprocess
+CONTRACT_SWEEP_CODE = r"""
+import numpy as np
+from conftest import (CONTRACT_SPECS, check_contract_case, contract_case,
+                      run_contract)
+from repro.launch.mesh import make_mesh
+
+grid = ({p_row}, {p_col})
+mesh = make_mesh(grid, ("data", "model"))
+for family in CONTRACT_SPECS:
+    case = contract_case(family, seed=11)
+    got = run_contract(case, mesh)
+    check_contract_case(case, got, f"{{family}}/{p_row}x{p_col}")
+print("CONTRACT_SWEEP_OK")
+"""
+
+
 #: the subprocess sweep body — one grid per subprocess, full
 #: strategy x family cross inside (shared by test_oracle.py)
 ORACLE_SWEEP_CODE = r"""

@@ -1,0 +1,45 @@
+"""Regenerate the committed golden chained-contraction trace.
+
+Run after an *intentional* change to the chain union-graph builder
+(``sched.taskgraph.chain_graphs``), the window edges, or the simulator:
+
+    PYTHONPATH=src:tests python tests/golden/regen_contract_chain_trace.py
+
+and commit the refreshed ``contract_chain_trace.json`` together with the
+change that moved it.  The payload also pins the chain's reason to
+exist — the joint makespan never exceeding the sequential sum — so a
+regression there diffs loudly too.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from test_contract import GOLDEN_CHAIN_TRACE, _chain_golden_graphs  # noqa: E402
+
+from repro.sched import chain_graphs, simulate  # noqa: E402
+
+
+def main() -> None:
+    graphs = _chain_golden_graphs()
+    sequential = float(sum(simulate(g).makespan_s for g in graphs))
+    sim = simulate(chain_graphs(graphs), trace=True)
+    payload = {
+        "makespan_s": sim.makespan_s,
+        "joint_makespan_s": sim.makespan_s,
+        "sequential_makespan_s": sequential,
+        "fingerprint": sim.fingerprint(),
+        "trace": sim.chrome_trace(),
+    }
+    with open(GOLDEN_CHAIN_TRACE, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(
+        f"wrote {GOLDEN_CHAIN_TRACE}: joint={sim.makespan_s:.3e}s vs "
+        f"sequential={sequential:.3e}s, "
+        f"fingerprint={sim.fingerprint()[:12]}, {len(sim.spans)} spans"
+    )
+
+
+if __name__ == "__main__":
+    main()

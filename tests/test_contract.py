@@ -1,0 +1,485 @@
+"""repro.contract: spec parsing, matricization invariants, chain scheduling.
+
+Deterministic unit tests for the einsum front-end (parse classification,
+mask/rank matricize-unmatricize round trips, fill preservation, bitwise
+all-True-mask == dense, inferred output masks, batch modes) plus the
+chained-contraction golden trace (fingerprint-pinned, like the sched
+trace) and the joint-vs-sequential makespan guarantee.  The hypothesis
+block at the bottom property-tests the matricization layer over random
+(possibly nonuniform) tilings; it needs the ``[dev]`` extra and is
+marked ``slow`` (the full-sweep CI job runs it).
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    BlockSparseTensor,
+    DistributedMatmul,
+    contract,
+    contract_chain,
+    nonuniform_tiling,
+    parse_contraction,
+    uniform_tiling,
+)
+from repro.core.contract import (
+    expand_block_mask,
+    matricize_mask,
+    merge_tilings,
+    unmatricize_mask,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.sched import chain_graphs, from_tilings, simulate, tune_chain
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev extra not installed: plain tests still run
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_classifies_modes():
+    s = parse_contraction("abc,cd->abd")
+    assert s.batch == ()
+    assert s.contracted == ("c",)
+    assert s.free_x == ("a", "b")
+    assert s.free_y == ("d",)
+    s = parse_contraction("sab,sbc->sac")
+    assert s.batch == ("s",)
+    assert s.contracted == ("b",)
+    s = parse_contraction("abc,bcd->ad")
+    assert s.contracted == ("b", "c")
+    s = parse_contraction("ab,ca->cb")  # contracted mode first in x
+    assert s.contracted == ("a",)
+    assert s.free_x == ("b",) and s.free_y == ("c",)
+
+
+def test_parse_rejects_bad_specs():
+    with pytest.raises(ValueError, match="explicit output"):
+        parse_contraction("ab,bc")
+    with pytest.raises(ValueError, match="exactly two"):
+        parse_contraction("ab,bc,cd->ad")
+    with pytest.raises(ValueError, match="repeated mode"):
+        parse_contraction("aab,bc->ac")
+    with pytest.raises(ValueError, match="appear in no input"):
+        parse_contraction("ab,bc->az")
+    with pytest.raises(ValueError, match="sum-reductions"):
+        parse_contraction("abz,bc->ac")
+    with pytest.raises(ValueError, match="contracts no mode"):
+        parse_contraction("ab,cd->abcd")
+
+
+# ---------------------------------------------------------------------------
+# matricization invariants (deterministic)
+# ---------------------------------------------------------------------------
+
+
+def test_merge_tilings_blocks_are_contiguous():
+    """Every merged block occupies one contiguous range whose length is
+    the product of its mode block sizes, in lexicographic block order."""
+    t1 = nonuniform_tiling(30, 3, seed=1)
+    t2 = nonuniform_tiling(20, 4, seed=2)
+    merged, perm = merge_tilings((t1, t2))
+    assert merged.extent == t1.extent * t2.extent
+    assert merged.num_blocks == t1.num_blocks * t2.num_blocks
+    sizes = np.multiply.outer(t1.sizes, t2.sizes).ravel()
+    assert merged.sizes == tuple(int(s) for s in sizes)
+    # permuted elements of merged block (b1, b2) are exactly the flat
+    # row-major indices of the tensor block's cartesian product
+    off = 0
+    for b1 in range(t1.num_blocks):
+        for b2 in range(t2.num_blocks):
+            n = t1.sizes[b1] * t2.sizes[b2]
+            got = set(perm[off : off + n].tolist())
+            r0 = t1.offsets[b1]
+            c0 = t2.offsets[b2]
+            want = {
+                (r0 + i) * t2.extent + (c0 + j)
+                for i in range(t1.sizes[b1])
+                for j in range(t2.sizes[b2])
+            }
+            assert got == want, (b1, b2)
+            off += n
+
+
+def test_merge_tilings_trailing_single_block_is_identity():
+    t1 = nonuniform_tiling(24, 4, seed=0)
+    merged, perm = merge_tilings((t1, uniform_tiling(7, 7)))
+    assert perm is None
+    assert merged.sizes == tuple(s * 7 for s in t1.sizes)
+
+
+def test_mask_matricize_round_trip_and_fill():
+    rng = np.random.default_rng(0)
+    modes = ("a", "b", "c")
+    grids = {"a": 3, "b": 2, "c": 4}
+    mask = rng.random((3, 2, 4)) < 0.5
+    m2 = matricize_mask(mask, modes, ("a", "b"), ("c",))
+    assert m2.shape == (6, 4)
+    back = unmatricize_mask(m2, ("a", "b"), ("c",), grids, modes)
+    np.testing.assert_array_equal(back, mask)
+    # any output permutation round-trips too
+    back2 = unmatricize_mask(m2, ("a", "b"), ("c",), grids, ("c", "a", "b"))
+    np.testing.assert_array_equal(back2, np.transpose(mask, (2, 0, 1)))
+
+
+def test_matricized_fill_equals_tensor_fill():
+    """Merging modes must preserve the live-element fraction exactly,
+    uniform or not (areas weight the nonuniform case)."""
+    rng = np.random.default_rng(1)
+    t1, t2, t3 = (
+        nonuniform_tiling(18, 3, seed=2),
+        uniform_tiling(12, 4),
+        nonuniform_tiling(10, 2, seed=3),
+    )
+    mask = rng.random((3, 3, 2)) < 0.4
+    x = BlockSparseTensor(
+        data=jnp.zeros((18, 12, 10), jnp.float32),
+        tilings=(t1, t2, t3),
+        mask=mask,
+    )
+    row_t, _ = merge_tilings((t1, t2))
+    m2 = matricize_mask(mask, ("a", "b", "c"), ("a", "b"), ("c",))
+    x2 = BlockSparseTensor(
+        data=jnp.zeros((row_t.extent, t3.extent), jnp.float32),
+        tilings=(row_t, t3),
+        mask=m2,
+    )
+    assert x2.fill() == pytest.approx(x.fill(), abs=0)
+    # and the element-resolution expansions agree up to the permutation
+    assert expand_block_mask(m2, (row_t, t3)).sum() == expand_block_mask(
+        mask, (t1, t2, t3)
+    ).sum()
+
+
+def test_all_true_mask_matches_dense_bitwise():
+    """An all-True mask must not perturb numerics at all: same panel
+    decomposition => the masked DAG accumulates the identical panel dots
+    in the identical order as the dense pipeline."""
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(2)
+    a = rng.normal(size=(48, 64)).astype(np.float32)
+    b = rng.normal(size=(64, 40)).astype(np.float32)
+    mm = DistributedMatmul(mesh, strategy="taskbased", k_blocks=4)
+    x = BlockSparseTensor.from_dense(
+        jnp.asarray(a), block_shape=(12, 16), mask=np.ones((4, 4), bool)
+    )
+    y = BlockSparseTensor.from_dense(
+        jnp.asarray(b), block_shape=(16, 10), mask=np.ones((4, 4), bool)
+    )
+    got_masked = np.asarray(contract("ab,bc->ac", x, y, mm=mm).data)
+    got_dense = np.asarray(
+        contract("ab,bc->ac", jnp.asarray(a), jnp.asarray(b), mm=mm).data
+    )
+    assert np.array_equal(got_masked, got_dense)
+
+
+def test_inferred_output_mask_is_exact():
+    """The inferred C mask is the boolean mask product, and every block
+    outside it is identically zero in the computed result."""
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(3)
+    am = rng.random((4, 6)) < 0.3
+    bm = rng.random((6, 5)) < 0.3
+    x = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32)),
+        block_shape=(8, 8), mask=am,
+    )
+    y = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(48, 40)).astype(np.float32)),
+        block_shape=(8, 8), mask=bm,
+    )
+    out = contract("ab,bc->ac", x, y, mm=DistributedMatmul(mesh))
+    want_mask = (am.astype(int) @ bm.astype(int)) > 0
+    np.testing.assert_array_equal(out.mask, want_mask)
+    dead = ~expand_block_mask(want_mask, out.tilings)
+    assert np.all(np.asarray(out.data)[dead] == 0.0)
+
+
+def test_raw_array_operand_adopts_partner_blocking():
+    """A structureless raw-array operand contracts against a masked
+    tensor by adopting its blocking on the shared modes."""
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(7)
+    a = rng.normal(size=(48, 64)).astype(np.float32)
+    b = rng.normal(size=(64, 40)).astype(np.float32)
+    am = rng.random((4, 4)) < 0.5
+    x = BlockSparseTensor.from_dense(
+        jnp.asarray(a), block_shape=(12, 16), mask=am
+    )
+    out = contract("ab,bc->ac", x, jnp.asarray(b), mm=DistributedMatmul(mesh))
+    ref = np.einsum(
+        "ab,bc->ac", x.to_dense().astype(np.float64), b.astype(np.float64)
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.data), ref, atol=5e-4, rtol=1e-4
+    )
+    assert out.mask.shape == (4, 1)  # x's row blocks x y's trivial column
+
+
+def test_batch_mode_mismatch_raises():
+    """Batch extents must agree, and a structured second operand must
+    block batch modes like the first — silent mask mis-slicing is a bug
+    class this pins (previously corrupted instead of raising)."""
+    mesh = make_host_mesh(1, 1)
+    mm = DistributedMatmul(mesh)
+    rng = np.random.default_rng(8)
+    x = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(4, 8, 8)).astype(np.float32)),
+        block_shape=(2, 4, 4), mask=rng.random((2, 2, 2)) < 0.7,
+    )
+    y_short = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(2, 8, 8)).astype(np.float32)),
+        block_shape=(2, 4, 4),
+    )
+    with pytest.raises(ValueError, match="extents disagree"):
+        contract("sab,sbc->sac", x, y_short, mm=mm)
+    y_reblocked = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(4, 8, 8)).astype(np.float32)),
+        block_shape=(1, 4, 4), mask=rng.random((4, 2, 2)) < 0.7,
+    )
+    with pytest.raises(ValueError, match="block batch modes"):
+        contract("sab,sbc->sac", x, y_reblocked, mm=mm)
+    # a *plain* y with different batch blocking is fine (nothing
+    # block-granular of y is sliced)
+    y_plain = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(4, 8, 8)).astype(np.float32)),
+        block_shape=(1, 4, 4),
+    )
+    out = contract("sab,sbc->sac", x, y_plain, mm=mm)
+    ref = np.einsum(
+        "sab,sbc->sac", x.to_dense().astype(np.float64),
+        np.asarray(y_plain.data, np.float64),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.data), ref, atol=5e-4, rtol=1e-4
+    )
+
+
+def test_scalar_full_contraction():
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(4)
+    a = rng.normal(size=(12, 8)).astype(np.float32)
+    b = rng.normal(size=(12, 8)).astype(np.float32)
+    out = contract(
+        "ab,ab->", jnp.asarray(a), jnp.asarray(b.T).T,
+        mm=DistributedMatmul(mesh),
+    )
+    assert out.ndim == 0
+    np.testing.assert_allclose(
+        float(out.data), float((a.astype(np.float64) * b).sum()),
+        rtol=1e-5,
+    )
+
+
+def test_rank_csr_operand_requires_identity_matricization():
+    mesh = make_host_mesh(1, 1)
+    from repro.core import decay_rank_map, synthesize_rank_csr
+
+    rcsr = synthesize_rank_csr(decay_rank_map(2, 2, 8, 8, max_rank=4))
+    x = BlockSparseTensor.from_rank_csr(rcsr)
+    y = BlockSparseTensor.from_dense(
+        jnp.zeros((16, 16), jnp.float32), block_shape=(8, 8)
+    )
+    with pytest.raises(NotImplementedError, match="densify"):
+        contract("ab,ca->cb", x, y, mm=DistributedMatmul(mesh))
+
+
+# ---------------------------------------------------------------------------
+# chained contractions: union graph + golden trace
+# ---------------------------------------------------------------------------
+
+GOLDEN_CHAIN_TRACE = (
+    __file__.rsplit("/", 1)[0] + "/golden/contract_chain_trace.json"
+)
+
+
+def _chain_golden_graphs(lookaheads=(None, None)):
+    """The committed chain workload: D = (A.B).C, nonuniform blocks on a
+    2x2 grid (small enough to eyeball in a trace viewer)."""
+    rt = nonuniform_tiling(256, 8, seed=1)
+    it = nonuniform_tiling(256, 8, seed=2)
+    ct = nonuniform_tiling(256, 8, seed=3)
+    dt = nonuniform_tiling(256, 8, seed=4)
+    g1 = from_tilings(2, 2, rt, it, ct, lookahead=lookaheads[0])
+    g2 = from_tilings(2, 2, rt, ct, dt, lookahead=lookaheads[1])
+    return [g1, g2]
+
+
+def test_chain_graph_structure():
+    graphs = _chain_golden_graphs()
+    union = chain_graphs(graphs)
+    union.validate()
+    assert len(union.tasks) == sum(len(g.tasks) for g in graphs)
+    # step-2 A broadcasts carry exactly one cross edge (the producing
+    # device's final accumulate); step-2 B broadcasts carry none
+    n1 = len(graphs[0].tasks)
+    last_accums = {
+        t.devices[0]: t.tid
+        for t in union.tasks[:n1] if t.kind == "accum"
+    }
+    for t2, (tu, du) in zip(
+        graphs[1].tasks, zip(union.tasks[n1:], union.deps[n1:])
+    ):
+        own = [d for d in du if d < n1]
+        if tu.kind == "bcast_a":
+            assert len(own) == 1 and own[0] in last_accums.values()
+        else:
+            assert not own
+
+
+def test_chain_joint_never_worse_than_sequential():
+    graphs = _chain_golden_graphs()
+    seq = sum(simulate(g).makespan_s for g in graphs)
+    joint = simulate(chain_graphs(graphs)).makespan_s
+    assert joint <= seq * (1 + 1e-12)
+
+
+def test_chain_matches_golden_trace():
+    """Pins the chained schedule end to end: any change to the union
+    graph builder, window edges, or simulator moves the committed
+    makespan and fingerprint (regen_contract_chain_trace.py)."""
+    with open(GOLDEN_CHAIN_TRACE) as f:
+        golden = json.load(f)
+    sim = simulate(chain_graphs(_chain_golden_graphs()), trace=True)
+    assert sim.fingerprint() == golden["fingerprint"]
+    assert sim.makespan_s == golden["makespan_s"]
+    # the invariant the chain exists for, pinned alongside the trace
+    assert golden["joint_makespan_s"] <= golden["sequential_makespan_s"]
+
+
+def test_tune_chain_never_worse_than_default():
+    builders = [
+        lambda la: _chain_golden_graphs((la, None))[0],
+        lambda la: _chain_golden_graphs((None, la))[1],
+    ]
+    las, sim, record = tune_chain(builders)
+    default = simulate(chain_graphs(_chain_golden_graphs()))
+    assert sim.makespan_s <= default.makespan_s * (1 + 1e-12)
+    assert record["lookaheads"] == [int(x) for x in las]
+
+
+def test_contract_chain_end_to_end_matches_einsum():
+    """contract_chain executes the jointly planned schedule and still
+    matches the composed float64 reference; masks propagate through the
+    chain via the inferred output masks."""
+    from repro.core import decay_block_mask
+
+    mesh = make_host_mesh(1, 1)
+    mm = DistributedMatmul(mesh, strategy="taskbased")
+    rng = np.random.default_rng(5)
+    am = decay_block_mask(4, 4, decay=0.6, threshold=5e-2)
+    x = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)),
+        block_shape=(16, 16), mask=am,
+    )
+    y1 = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)),
+        block_shape=(16, 16), mask=am,
+    )
+    y2 = BlockSparseTensor.from_dense(
+        jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32)),
+        block_shape=(16, 12),
+    )
+    res, report = contract_chain(
+        [("ab,bc->ac", x, y1), ("ab,bc->ac", y2)], mm=mm, tune=True
+    )
+    ref = (
+        x.to_dense().astype(np.float64) @ y1.to_dense().astype(np.float64)
+    ) @ np.asarray(y2.data, np.float64)
+    np.testing.assert_allclose(
+        np.asarray(res.data), ref, atol=5e-4, rtol=1e-4
+    )
+    assert report["joint_makespan_s"] <= report["sequential_makespan_s"]
+    assert len(report["lookaheads"]) == 2
+    assert res.mask is not None  # step-1 mask propagated through
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: matricization properties over random (nonuniform) tilings
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _tiling(draw, max_extent=18):
+        extent = draw(st.integers(2, max_extent))
+        nblocks = draw(st.integers(1, min(4, extent)))
+        seed = draw(st.integers(0, 2**16))
+        if draw(st.booleans()):
+            block = max(1, extent // nblocks)
+            return uniform_tiling(extent, block)
+        return nonuniform_tiling(extent, nblocks, seed=seed)
+
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None)
+    @given(
+        tilings=st.lists(_tiling(), min_size=1, max_size=3),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hyp_merge_round_trip(tilings, seed):
+        """matricize -> unmatricize is the identity on data and masks,
+        and preserves fill exactly, for any mode split."""
+        rng = np.random.default_rng(seed)
+        tilings = tuple(tilings)
+        grid = tuple(t.num_blocks for t in tilings)
+        mask = rng.random(grid) < 0.5
+        modes = tuple("abcd"[: len(tilings)])
+        for cut in range(len(tilings) + 1):
+            row_modes, col_modes = modes[:cut], modes[cut:]
+            m2 = matricize_mask(mask, modes, row_modes, col_modes)
+            back = unmatricize_mask(
+                m2, row_modes, col_modes,
+                dict(zip(modes, grid)), modes,
+            )
+            np.testing.assert_array_equal(back, mask.reshape(grid or (1,)))
+            # fill preservation (area-weighted)
+            row_t, _ = merge_tilings(tilings[:cut])
+            col_t, _ = merge_tilings(tilings[cut:])
+            x = BlockSparseTensor(
+                data=jnp.zeros(tuple(t.extent for t in tilings)),
+                tilings=tilings, mask=mask,
+            )
+            x2 = BlockSparseTensor(
+                data=jnp.zeros((row_t.extent, col_t.extent)),
+                tilings=(row_t, col_t), mask=m2,
+            )
+            assert x2.fill() == pytest.approx(x.fill(), abs=1e-12)
+
+    @pytest.mark.slow
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t1=_tiling(max_extent=12),
+        t2=_tiling(max_extent=12),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hyp_merged_perm_is_block_gather(t1, t2, seed):
+        """The merged permutation maps every tensor block to one
+        contiguous matrix range (the contract() correctness kernel)."""
+        rng = np.random.default_rng(seed)
+        merged, perm = merge_tilings((t1, t2))
+        data = rng.normal(size=(t1.extent, t2.extent))
+        flat = data.ravel()
+        flat = flat[perm] if perm is not None else flat
+        off = 0
+        for b1 in range(t1.num_blocks):
+            r0 = t1.offsets[b1]
+            for b2 in range(t2.num_blocks):
+                c0 = t2.offsets[b2]
+                blk = data[
+                    r0 : r0 + t1.sizes[b1], c0 : c0 + t2.sizes[b2]
+                ]
+                n = blk.size
+                np.testing.assert_array_equal(
+                    np.sort(flat[off : off + n]), np.sort(blk.ravel())
+                )
+                off += n

@@ -13,11 +13,16 @@ import numpy as np
 import pytest
 
 from conftest import (
+    CONTRACT_SPECS,
+    CONTRACT_SWEEP_CODE,
     ORACLE_FAMILIES,
     ORACLE_STRATEGIES,
     ORACLE_SWEEP_CODE,
     check_case,
+    check_contract_case,
+    contract_case,
     oracle_case,
+    run_contract,
     run_strategy,
 )
 from repro.core import (
@@ -98,6 +103,31 @@ def test_oracle_sweep_2x2(subproc):
 def test_oracle_sweep_2x4(subproc):
     out = subproc(ORACLE_SWEEP_CODE.format(p_row=2, p_col=4), devices=8)
     assert "ORACLE_SWEEP_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# contraction oracle: every spec family vs float64 np.einsum
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", CONTRACT_SPECS)
+def test_contract_oracle_1x1(family):
+    mesh = make_host_mesh(1, 1)
+    case = contract_case(family, seed=5)
+    got = run_contract(case, mesh)
+    check_contract_case(case, got, f"{family}/1x1")
+
+
+@pytest.mark.slow
+def test_contract_oracle_sweep_2x2(subproc):
+    out = subproc(CONTRACT_SWEEP_CODE.format(p_row=2, p_col=2), devices=4)
+    assert "CONTRACT_SWEEP_OK" in out
+
+
+@pytest.mark.slow
+def test_contract_oracle_sweep_2x4(subproc):
+    out = subproc(CONTRACT_SWEEP_CODE.format(p_row=2, p_col=4), devices=8)
+    assert "CONTRACT_SWEEP_OK" in out
 
 
 # ---------------------------------------------------------------------------
