@@ -36,6 +36,39 @@ def _row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+def _block(out):
+    """Wait for device completion of a bench result (raw array or
+    ``BlockSparseTensor``)."""
+    data = getattr(out, "data", out)
+    if hasattr(data, "block_until_ready"):
+        data.block_until_ready()
+    else:
+        np.asarray(data)
+    return out
+
+
+def timed_split(fn, *args, iters: int = 3):
+    """Split first-call from steady-state timing.
+
+    Returns ``(out, compile_s, wall_s)``: ``compile_s`` is the first call
+    (trace + compile + run — what a cold cache costs), ``wall_s`` the
+    median of ``iters`` (>= 3) post-warmup calls — the dispatch-bound
+    steady state the executable cache is accountable for.  Earlier
+    BENCH_*.json trajectories conflated the two.
+    """
+    import time as _t
+
+    t0 = _t.perf_counter()
+    out = _block(fn(*args))
+    compile_s = _t.perf_counter() - t0
+    walls = []
+    for _ in range(max(int(iters), 3)):
+        t0 = _t.perf_counter()
+        out = _block(fn(*args))
+        walls.append(_t.perf_counter() - t0)
+    return out, compile_s, float(np.median(walls))
+
+
 def bench_table1():
     from repro.core.blocking import load_stats, nonuniform_tiling
 
@@ -193,7 +226,6 @@ def bench_planned_sparse(json_path: str) -> None:
     the cross-PR perf trajectory record.
     """
     import json
-    import time as _t
 
     import jax
     import jax.numpy as jnp
@@ -222,20 +254,16 @@ def bench_planned_sparse(json_path: str) -> None:
         return r.random((kb, kb)) < fill
 
     def timed(fn):
-        out = fn(a, b)
-        out.block_until_ready()
-        t0 = _t.perf_counter()
-        for _ in range(3):
-            out = fn(a, b)
-        out.block_until_ready()
-        return (_t.perf_counter() - t0) / 3
+        _, compile_s, wall = timed_split(fn, a, b)
+        return compile_s, wall
 
-    dense_wall = timed(jax.jit(lambda a, b: mm(a, b)))
+    dense_compile, dense_wall = timed(jax.jit(lambda a, b: mm(a, b)))
     dense_plan = mm.plan(n, n, n)
     entries = [
         {
             "name": "dense_N1024",
             "wall_s": dense_wall,
+            "compile_s": dense_compile,
             "gflops_per_s": 2.0 * n**3 / dense_wall / 1e9,
             "speedup_vs_dense": 1.0,
             "plan": dense_plan.summary(),
@@ -246,7 +274,7 @@ def bench_planned_sparse(json_path: str) -> None:
         am = screened_mask(fill, seed=1)
         bm = screened_mask(fill, seed=2)
         plan = mm.plan(n, n, n, a_mask=am, b_mask=bm)
-        wall = timed(
+        compile_s, wall = timed(
             jax.jit(lambda a, b, am=am, bm=bm: mm(a, b, a_mask=am, b_mask=bm))
         )
         useful = plan.cost.flops_sparse
@@ -254,6 +282,7 @@ def bench_planned_sparse(json_path: str) -> None:
             {
                 "name": f"planned_sparse_fill{fill}_N{n}",
                 "wall_s": wall,
+                "compile_s": compile_s,
                 "gflops_per_s": useful / wall / 1e9,
                 "speedup_vs_dense": dense_wall / wall,
                 "plan": plan.summary(),
@@ -266,7 +295,14 @@ def bench_planned_sparse(json_path: str) -> None:
             f"comm_B={plan.cost.comm_bytes['taskbased']:.3g}",
         )
     with open(json_path, "w") as f:
-        json.dump({"bench": "summa", "entries": entries}, f, indent=2)
+        json.dump(
+            {
+                "bench": "summa",
+                "entries": entries,
+                "cache_stats": mm.cache_stats(),
+            },
+            f, indent=2,
+        )
     print(f"# wrote {json_path}", flush=True)
 
 
@@ -282,7 +318,6 @@ def bench_sched(json_path: str) -> None:
     simulated makespan is never worse.
     """
     import json
-    import time as _t
 
     import jax
     import jax.numpy as jnp
@@ -307,17 +342,15 @@ def bench_sched(json_path: str) -> None:
     mm = DistributedMatmul(mesh, strategy="taskbased", k_blocks=4)
     rng = np.random.default_rng(0)
 
+    compile_by_n: dict[int, float] = {}
+
     def timed(n):
         a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
         b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
         f = jax.jit(lambda a, b: mm(a, b))
-        out = f(a, b)
-        out.block_until_ready()
-        t0 = _t.perf_counter()
-        for _ in range(3):
-            out = f(a, b)
-        out.block_until_ready()
-        return (_t.perf_counter() - t0) / 3
+        _, compile_s, wall = timed_split(f, a, b)
+        compile_by_n[n] = compile_s
+        return wall
 
     # (1) calibrate the machine FLOP rate on one compute-bound dense case,
     # then predict the rest: the 30% acceptance band of EXPERIMENTS.md.
@@ -339,6 +372,7 @@ def bench_sched(json_path: str) -> None:
                 "grid": [1, 1],
                 "predicted_makespan_s": sim.makespan_s,
                 "measured_wall_s": wall,
+                "compile_s": compile_by_n[n],
                 "rel_err": rel,
                 "within_30pct": bool(rel <= 0.30),
                 "chosen_lookahead": plan.resolve_lookahead(),
@@ -402,7 +436,14 @@ def bench_sched(json_path: str) -> None:
             f"I={t['lookahead']};speedup={t['speedup_vs_static']:.2f}",
         )
     with open(json_path, "w") as f:
-        json.dump({"bench": "sched", "entries": entries}, f, indent=2)
+        json.dump(
+            {
+                "bench": "sched",
+                "entries": entries,
+                "cache_stats": mm.cache_stats(),
+            },
+            f, indent=2,
+        )
     print(f"# wrote {json_path}", flush=True)
 
 
@@ -419,7 +460,6 @@ def bench_ranksparse(json_path: str) -> None:
     acceptance bar is rank-sparse beating mask-only at mean rank <= bm/4.
     """
     import json
-    import time as _t
 
     import jax
     import jax.numpy as jnp
@@ -440,20 +480,16 @@ def bench_ranksparse(json_path: str) -> None:
     b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
 
     def timed(fn):
-        out = fn(b)
-        out.block_until_ready()
-        t0 = _t.perf_counter()
-        for _ in range(5):
-            out = fn(b)
-        out.block_until_ready()
-        return (_t.perf_counter() - t0) / 5
+        _, compile_s, wall = timed_split(fn, b, iters=5)
+        return compile_s, wall
 
     a_dense = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
-    dense_wall = timed(jax.jit(lambda b: mm(a_dense, b)))
+    dense_compile, dense_wall = timed(jax.jit(lambda b: mm(a_dense, b)))
     entries = [
         {
             "name": "dense_N1024",
             "wall_s": dense_wall,
+            "compile_s": dense_compile,
             "mean_rank": float(bsz),
             "speedup_vs_dense": 1.0,
             "plan": mm.plan(n, n, n).summary(),
@@ -471,7 +507,7 @@ def bench_ranksparse(json_path: str) -> None:
         rcsr = synthesize_rank_csr(rank_map, seed=1)
         if mask_wall is None:
             a_twin = jnp.asarray(rcsr.to_dense())
-            mask_wall = timed(
+            mask_compile, mask_wall = timed(
                 jax.jit(
                     lambda b, a=a_twin, m=rank_map.mask: mm(a, b, a_mask=m)
                 )
@@ -481,6 +517,7 @@ def bench_ranksparse(json_path: str) -> None:
                 {
                     "name": "maskonly_decay_N1024",
                     "wall_s": mask_wall,
+                    "compile_s": mask_compile,
                     "speedup_vs_dense": dense_wall / mask_wall,
                     "plan": mask_plan.summary(),
                 }
@@ -490,7 +527,7 @@ def bench_ranksparse(json_path: str) -> None:
                 f"speedup={dense_wall / mask_wall:.2f};"
                 f"fill={mask_plan.cost.fill_in:.3f}",
             )
-        rank_wall = timed(
+        rank_compile, rank_wall = timed(
             jax.jit(lambda b, r=rcsr: mm(None, b, a_ranks=r))
         )
         plan = mm.plan(n, n, n, a_ranks=rcsr)
@@ -499,6 +536,7 @@ def bench_ranksparse(json_path: str) -> None:
             {
                 "name": f"ranksparse_rmax{max_rank}_N1024",
                 "wall_s": rank_wall,
+                "compile_s": rank_compile,
                 "mean_rank": mean_rank,
                 "speedup_vs_dense": dense_wall / rank_wall,
                 "speedup_vs_maskonly": mask_wall / rank_wall,
@@ -516,7 +554,14 @@ def bench_ranksparse(json_path: str) -> None:
             f"flops_mask={plan.cost.flops_mask:.3g}",
         )
     with open(json_path, "w") as f:
-        json.dump({"bench": "ranksparse", "entries": entries}, f, indent=2)
+        json.dump(
+            {
+                "bench": "ranksparse",
+                "entries": entries,
+                "cache_stats": mm.cache_stats(),
+            },
+            f, indent=2,
+        )
     print(f"# wrote {json_path}", flush=True)
 
 
@@ -543,7 +588,6 @@ def bench_contract(json_path: str) -> None:
     the gate is noise-free.
     """
     import json
-    import time as _t
 
     import jax.numpy as jnp
     import numpy as np
@@ -567,13 +611,7 @@ def bench_contract(json_path: str) -> None:
     rng = np.random.default_rng(0)
 
     def timed(fn, *args):
-        out = fn(*args)
-        np.asarray(out.data)  # block
-        t0 = _t.perf_counter()
-        for _ in range(3):
-            out = fn(*args)
-        np.asarray(out.data)
-        return out, (_t.perf_counter() - t0) / 3
+        return timed_split(fn, *args)
 
     def dense(shape, block_shape, mask=None):
         data = rng.normal(size=shape).astype(np.float32)
@@ -620,7 +658,7 @@ def bench_contract(json_path: str) -> None:
         ("rank_sparse", case_rank), ("nonuniform", case_nonuniform),
     ):
         spec, x, y, tile = case()
-        out, wall = timed(
+        out, compile_s, wall = timed(
             lambda: contract(spec, x, y, mm=mm, tile=tile)
         )
         ref = np.einsum(
@@ -636,6 +674,7 @@ def bench_contract(json_path: str) -> None:
                 "name": f"contract_{name}",
                 "spec": spec,
                 "wall_s": wall,
+                "compile_s": compile_s,
                 "max_abs_err": resid,
                 "out_fill": out.fill(),
                 "plan": plan.summary(),
@@ -643,7 +682,8 @@ def bench_contract(json_path: str) -> None:
         )
         _row(
             f"contract_{name}", wall * 1e6,
-            f"spec={spec};err={resid:.2e};fill={plan.cost.fill_in:.3f}",
+            f"spec={spec};compile_s={compile_s:.2f};err={resid:.2e};"
+            f"fill={plan.cost.fill_in:.3f}",
         )
 
     # (2) the nonuniform chain on a virtual 8x8 grid
@@ -676,16 +716,24 @@ def bench_contract(json_path: str) -> None:
         f"speedup={seq/tuned_sim.makespan_s:.3f};I={las}",
     )
 
-    # executed chain on the host mesh (correctness + wall record)
+    # executed chain on the host mesh (correctness + wall record); the
+    # whole chain is one compiled program, so steady-state wall_s is pure
+    # dispatch + compute with zero host round-trips between steps
     am = decay_block_mask(8, 8, decay=0.5, threshold=5e-2)
     x = dense((512, 512), (64, 64), mask=am)
     y1 = dense((512, 512), (64, 64), mask=am)
     y2 = dense((512, 384), (64, 48))
-    t0 = _t.perf_counter()
-    res, report = contract_chain(
-        [("ab,bc->ac", x, y1), ("ab,bc->ac", y2)], mm=mm, tune=True
-    )
-    wall = _t.perf_counter() - t0
+    report_box = {}
+
+    def run_chain():
+        res, report = contract_chain(
+            [("ab,bc->ac", x, y1), ("ab,bc->ac", y2)], mm=mm, tune=True
+        )
+        report_box["report"] = report
+        return res
+
+    res, compile_s, wall = timed(run_chain)
+    report = report_box["report"]
     ref = (
         x.to_dense().astype(np.float64) @ y1.to_dense().astype(np.float64)
     ) @ np.asarray(y2.data, np.float64)
@@ -693,6 +741,7 @@ def bench_contract(json_path: str) -> None:
         {
             "name": "chain_executed_N512",
             "wall_s": wall,
+            "compile_s": compile_s,
             "max_abs_err": float(np.abs(np.asarray(res.data) - ref).max()),
             "joint_makespan_s": report["joint_makespan_s"],
             "sequential_makespan_s": report["sequential_makespan_s"],
@@ -706,7 +755,14 @@ def bench_contract(json_path: str) -> None:
         f"I={report['lookaheads']};fill={res.fill():.3f}",
     )
     with open(json_path, "w") as f:
-        json.dump({"bench": "contract", "entries": entries}, f, indent=2)
+        json.dump(
+            {
+                "bench": "contract",
+                "entries": entries,
+                "cache_stats": mm.cache_stats(),
+            },
+            f, indent=2,
+        )
     print(f"# wrote {json_path}", flush=True)
 
 
@@ -719,23 +775,33 @@ def main() -> None:
     ap.add_argument("--contract-json", default="BENCH_contract.json")
     ap.add_argument(
         "--only",
-        choices=("ranksparse", "sched", "summa", "contract"),
-        help="run a single JSON-writing section (CI artifact jobs)",
+        help="comma-separated list of JSON-writing sections to run "
+        "(ranksparse, sched, summa, contract), e.g. "
+        "--only summa,contract (CI artifact jobs)",
     )
     args = ap.parse_args()
+    runners = {
+        "summa": lambda: bench_planned_sparse(args.json),
+        "sched": lambda: bench_sched(args.sched_json),
+        "ranksparse": lambda: bench_ranksparse(args.ranksparse_json),
+        "contract": lambda: bench_contract(args.contract_json),
+    }
+    if args.only is not None:
+        names = [s.strip() for s in args.only.split(",") if s.strip()]
+        valid = ", ".join(sorted(runners))
+        if not names:
+            ap.error(f"--only: empty bench list (valid benches: {valid})")
+        unknown = [s for s in names if s not in runners]
+        if unknown:
+            ap.error(
+                f"--only: unknown bench name(s) {', '.join(unknown)} "
+                f"(valid benches: {valid})"
+            )
+        print("name,us_per_call,derived")
+        for s in names:
+            runners[s]()
+        return
     print("name,us_per_call,derived")
-    if args.only == "ranksparse":
-        bench_ranksparse(args.ranksparse_json)
-        return
-    if args.only == "sched":
-        bench_sched(args.sched_json)
-        return
-    if args.only == "summa":
-        bench_planned_sparse(args.json)
-        return
-    if args.only == "contract":
-        bench_contract(args.contract_json)
-        return
     bench_table1()
     bench_planned_sparse(args.json)
     bench_sched(args.sched_json)

@@ -37,6 +37,8 @@ from repro.core.sparsity import (
 )
 from repro.core.summa import (
     SummaConfig,
+    clear_executable_cache,
+    executable_cache_stats,
     execute_plan,
     execute_rank_plan,
     multi_issue_limit,
@@ -47,4 +49,5 @@ from repro.core.summa import (
     summa_25d_matmul,
     summa_blocksparse_matmul,
     summa_matmul,
+    warm_plan_executable,
 )

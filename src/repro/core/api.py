@@ -70,12 +70,24 @@ class DistributedMatmul:
     lookahead: int | None = None
     accum_dtype: Any = jnp.float32
     local_matmul: str = "xla"
+    #: dispatch cached jitted executables (core.summa / core.contract);
+    #: False forces the eager interpreters everywhere (oracle baseline)
+    compiled: bool = True
     _plan_cache: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
-    # spec/tiling-keyed matricization geometry for core.contract
+    # spec/tiling-keyed matricization geometry + compiled contraction
+    # programs for core.contract
     _contract_cache: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
+    )
+    _cache_stats: dict = dataclasses.field(
+        default_factory=lambda: {
+            "plan_hits": 0, "plan_misses": 0,
+            "geom_hits": 0, "geom_misses": 0,
+            "step_hits": 0, "step_misses": 0, "step_retraces": 0,
+        },
+        repr=False, compare=False,
     )
 
     def config(self, strategy: str | None = None) -> sm.SummaConfig:
@@ -139,6 +151,7 @@ class DistributedMatmul:
         )
         plan = self._plan_cache.get(key)
         if plan is None:
+            self._cache_stats["plan_misses"] += 1
             rank_map = a_ranks.rank_map() if rank_payload else a_ranks
             plan = plan_matmul(
                 m, k, n, self.config(strategy),
@@ -152,7 +165,41 @@ class DistributedMatmul:
             if lookahead is not None:
                 plan = dataclasses.replace(plan, lookahead=int(lookahead))
             self._plan_cache[key] = plan
+        else:
+            self._cache_stats["plan_hits"] += 1
         return plan
+
+    # -- observability -------------------------------------------------------
+
+    def cache_stats(self) -> dict:
+        """Hit/miss/retrace counters for every cache on the hot path.
+
+        ``plan``: the ``MatmulPlan`` cache on this instance.  ``contract``:
+        the matricization-geometry cache (``geom_*``) and the compiled
+        contraction-step programs (``step_*`` — ``step_retraces`` counts
+        actual jax traces, which must equal ``step_misses`` when keys are
+        stable).  ``executable``: the process-wide plan-digest-keyed
+        executable cache in ``core.summa``.
+        """
+        s = self._cache_stats
+        return {
+            "plan": {
+                "size": len(self._plan_cache),
+                "hits": s["plan_hits"], "misses": s["plan_misses"],
+            },
+            "contract": {
+                "size": len(self._contract_cache),
+                "geom_hits": s["geom_hits"], "geom_misses": s["geom_misses"],
+                "step_hits": s["step_hits"], "step_misses": s["step_misses"],
+                "step_retraces": s["step_retraces"],
+            },
+            "executable": sm.executable_cache_stats(),
+        }
+
+    def reset_cache_stats(self) -> None:
+        """Zero the counters (cache *contents* are kept)."""
+        for k in self._cache_stats:
+            self._cache_stats[k] = 0
 
     # -- call paths ----------------------------------------------------------
 
@@ -210,7 +257,7 @@ class DistributedMatmul:
         (mp, kp), (_, np_) = plan.padded_shapes
         a_p = _pad_to_shape(a, (mp, kp))
         b_p = _pad_to_shape(b, (kp, np_))
-        c_p = sm.execute_plan(a_p, b_p, plan)
+        c_p = sm.execute_plan(a_p, b_p, plan, compiled=self.compiled)
         return c_p[:m, :n]
 
     # -- tensor contractions -------------------------------------------------
@@ -261,11 +308,12 @@ class DistributedMatmul:
             # factor layout does not fit this grid: densify and run the
             # planned masked DAG (correct, mask-level pruning only)
             a_p = _pad_to_shape(jnp.asarray(a_ranks.to_dense()), (mp, kp))
-            c_p = sm.execute_plan(a_p, b_p, plan)
+            c_p = sm.execute_plan(a_p, b_p, plan, compiled=self.compiled)
             return c_p[:m, :n]
         u_all, v_all = sm.rank_operands(a_ranks, plan)
         c_p = sm.execute_rank_plan(
-            jnp.asarray(u_all), jnp.asarray(v_all), b_p, plan
+            jnp.asarray(u_all), jnp.asarray(v_all), b_p, plan,
+            compiled=self.compiled,
         )
         return c_p[:m, :n]
 

@@ -519,6 +519,9 @@ class _StepGeometry:
     out_row_perm_inv: np.ndarray | None
     out_col_perm_inv: np.ndarray | None
     tile: int
+    #: the structural key this geometry is cached under (None when the
+    #: front-end has no cache) — compiled step programs key off it
+    cache_key: tuple | None = None
 
 
 def _uniform_block(t: bk.Tiling) -> int:
@@ -671,11 +674,17 @@ def _geometry_cached(mm, spec_str: str, x, y, tile: int) -> _StepGeometry:
     spec = parse_contraction(spec_str)
     if cache is None:
         return _step_geometry(spec, x, y, tile)
+    stats = getattr(mm, "_cache_stats", None)
     key = (spec.spec, _tensor_key(x), _tensor_key(y), tile)
     geom = cache.get(key)
     if geom is None:
+        if stats is not None:
+            stats["geom_misses"] += 1
         geom = _step_geometry(spec, x, y, tile)
+        geom.cache_key = key
         cache[key] = geom
+    elif stats is not None:
+        stats["geom_hits"] += 1
     return geom
 
 
@@ -804,16 +813,29 @@ def _execute_step(
             b_mask=geom.b_mask2, a_ranks=a_ranks,
             lookahead=lookahead, tune=tune,
         )
-    # un-matricize: undo block-lex perms, split merged modes, reorder
+    fx_ext, fy_ext = _free_extents(geom, x, y)
+    return _unmatricize_step(c2, geom, fx_ext, fy_ext)
+
+
+def _free_extents(
+    geom: _StepGeometry, x: BlockSparseTensor, y: BlockSparseTensor
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    spec = geom.spec
+    xt = dict(zip(spec.x_modes, x.tilings))
+    yt = dict(zip(spec.y_modes, y.tilings))
+    return (
+        tuple(xt[m].extent for m in spec.free_x),
+        tuple(yt[m].extent for m in spec.free_y),
+    )
+
+
+def _unmatricize_step(c2, geom: _StepGeometry, fx_ext, fy_ext):
+    """Un-matricize: undo block-lex perms, split merged modes, reorder."""
+    import jax.numpy as jnp
+
     c2 = _apply_perm(c2, geom.out_row_perm_inv, 0)
     c2 = _apply_perm(c2, geom.out_col_perm_inv, 1)
     spec = geom.spec
-    fx_ext = tuple(
-        dict(zip(spec.x_modes, x.tilings))[m].extent for m in spec.free_x
-    )
-    fy_ext = tuple(
-        dict(zip(spec.y_modes, y.tilings))[m].extent for m in spec.free_y
-    )
     c_nd = c2.reshape(fx_ext + fy_ext or (1,))
     cur = spec.free_x + spec.free_y
     if cur:
@@ -833,6 +855,176 @@ def matricize_mask_elements(fine: np.ndarray, geom: _OperandGeom):
     if geom.col_perm is not None:
         m2 = m2[:, geom.col_perm]
     return m2
+
+
+# ---------------------------------------------------------------------------
+# compiled step programs: one jitted executable per cached geometry
+# ---------------------------------------------------------------------------
+
+
+def _with_data(t: BlockSparseTensor, data) -> BlockSparseTensor:
+    """Structural copy of ``t`` with ``data`` swapped in, no validation.
+
+    Compiled step programs close over a *data-free* twin and rebuild the
+    operand from the runtime array at trace time — the closure never
+    captures the caller's buffers (they would be pinned for the cache
+    lifetime and, worse, baked as constants on a retrace)."""
+    s = BlockSparseTensor.__new__(BlockSparseTensor)
+    s.data = data
+    s.tilings = t.tilings
+    s.mask = t.mask
+    s.ranks = t.ranks
+    s.rank_csr = t.rank_csr
+    return s
+
+
+def _any_traced(*datas) -> bool:
+    import jax
+
+    return any(
+        isinstance(d, jax.core.Tracer) for d in datas if d is not None
+    )
+
+
+def _cached_step(mm, key: tuple, build):
+    """Get-or-build a compiled contraction program in ``_contract_cache``
+    (hits/misses surface through ``DistributedMatmul.cache_stats``)."""
+    cache = mm._contract_cache
+    stats = getattr(mm, "_cache_stats", None)
+    fn = cache.get(key)
+    if fn is None:
+        if stats is not None:
+            stats["step_misses"] += 1
+        fn = build()
+        cache[key] = fn
+    elif stats is not None:
+        stats["step_hits"] += 1
+    return fn
+
+
+def _pad2(x2, shape: tuple[int, int]):
+    import jax.numpy as jnp
+
+    pads = [(0, t - d) for d, t in zip(x2.shape, shape)]
+    if all(p == (0, 0) for p in pads):
+        return x2
+    return jnp.pad(x2, pads)
+
+
+def _count_retrace(mm) -> None:
+    stats = getattr(mm, "_cache_stats", None)
+    if stats is not None:
+        stats["step_retraces"] += 1
+
+
+def _execute_step_compiled(
+    mm,
+    geom: _StepGeometry,
+    x: BlockSparseTensor,
+    y: BlockSparseTensor,
+    *,
+    lookahead: int | None = None,
+    tune: bool = False,
+):
+    """One cached jitted program for the whole step.
+
+    Matricize → planned product → un-matricize runs as a single compiled
+    executable keyed by the geometry's structural cache key + dtypes, so
+    a repeated contraction of the same structure is one dispatch with
+    zero retraces.  The planner (and for rank payloads the factor
+    *layout*) runs on the host at trace time; operand arrays — including
+    ``RankCSR`` factors, which a structural key must never bake in — are
+    runtime arguments.  Falls back to the eager :func:`_execute_step`
+    under an enclosing trace, with ``mm.compiled=False``, or when the
+    front-end carries no cache.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import summa as sm
+
+    if (
+        getattr(mm, "_contract_cache", None) is None
+        or geom.cache_key is None
+        or not getattr(mm, "compiled", True)
+        or _any_traced(x.data, y.data)
+    ):
+        return _execute_step(mm, geom, x, y, lookahead=lookahead, tune=tune)
+    fx_ext, fy_ext = _free_extents(geom, x, y)
+
+    if x.rank_csr is not None:
+        if not geom.x_geom.identity or not geom.uniform:
+            # eager path raises the informative NotImplementedError
+            return _execute_step(
+                mm, geom, x, y, lookahead=lookahead, tune=tune
+            )
+        m = geom.x_geom.row_tiling.extent
+        k = geom.x_geom.col_tiling.extent
+        n = geom.y_geom.col_tiling.extent
+        plan = mm.plan(
+            m, k, n, b_mask=geom.b_mask2, a_ranks=x.rank_csr,
+            itemsize=np.dtype(y.data.dtype).itemsize, tune=tune,
+            lookahead=lookahead,
+        )
+        (mp, kp), (_, np_) = plan.padded_shapes
+        if plan.local_impl == "ranksparse":
+            u_all, v_all = sm.rank_operands(x.rank_csr, plan)
+
+            def build(plan=plan):
+                def traced(u, v, yd):
+                    _count_retrace(mm)
+                    b_p = _pad2(geom.y_geom.matricize(yd), (kp, np_))
+                    c2 = sm.execute_rank_plan(u, v, b_p, plan)[:m, :n]
+                    return _unmatricize_step(c2, geom, fx_ext, fy_ext)
+
+                return jax.jit(traced)
+
+            key = (
+                "exec_rank", geom.cache_key, str(y.data.dtype),
+                lookahead, tune,
+            )
+            return _cached_step(mm, key, build)(
+                jnp.asarray(u_all), jnp.asarray(v_all), y.data
+            )
+
+        # factor layout does not fit the grid: densified masked-DAG
+        # product; the dense twin is still a runtime operand
+        def build(plan=plan):
+            def traced(ad, yd):
+                _count_retrace(mm)
+                a_p = _pad2(ad, (mp, kp))
+                b_p = _pad2(geom.y_geom.matricize(yd), (kp, np_))
+                c2 = sm.execute_plan(a_p, b_p, plan)[:m, :n]
+                return _unmatricize_step(c2, geom, fx_ext, fy_ext)
+
+            return jax.jit(traced)
+
+        key = (
+            "exec_rankdense", geom.cache_key, str(y.data.dtype),
+            lookahead, tune,
+        )
+        return _cached_step(mm, key, build)(
+            jnp.asarray(x.rank_csr.to_dense()), y.data
+        )
+
+    x_sym = _with_data(x, None)
+    y_sym = _with_data(y, None)
+
+    def build():
+        def traced(xd, yd):
+            _count_retrace(mm)
+            return _execute_step(
+                mm, geom, _with_data(x_sym, xd), _with_data(y_sym, yd),
+                lookahead=lookahead, tune=tune,
+            )
+
+        return jax.jit(traced)
+
+    key = (
+        "exec_step", geom.cache_key, str(x.data.dtype), str(y.data.dtype),
+        lookahead, tune,
+    )
+    return _cached_step(mm, key, build)(x.data, y.data)
 
 
 # ---------------------------------------------------------------------------
@@ -860,13 +1052,14 @@ def contract(
     :class:`BlockSparseTensor` whose mask is *inferred* from the operand
     structure (exactly the reachable C blocks), ready to chain.
     """
+    import jax
     import jax.numpy as jnp
 
     x, y = _wrap(x), _wrap(y)
     pspec = parse_contraction(spec)
     if not pspec.batch:
         geom = _geometry_cached(mm, spec, x, y, tile)
-        data = _execute_step(
+        data = _execute_step_compiled(
             mm, geom, x, y, lookahead=lookahead, tune=tune
         )
         if not pspec.out_modes:  # full contraction to a scalar
@@ -947,22 +1140,85 @@ def contract(
         )
 
     out_free = tuple(m for m in pspec.out_modes if m not in pspec.batch)
-    slices = []
+    all_idx = list(itertools.product(*[range(e) for e in extents]))
+    bblk_of_idx = [
+        tuple(int(blk_of[d][i]) for d, i in enumerate(idx))
+        for idx in all_idx
+    ]
+    slices: list = [None] * len(all_idx)
     masks: dict[tuple, np.ndarray | None] = {}
-    for idx in itertools.product(*[range(e) for e in extents]):
-        bblk = tuple(int(blk_of[d][i]) for d, i in enumerate(idx))
-        xs = _slice(x, bx, idx, bblk)
-        ys = _slice(y, by, idx, bblk)
-        out = contract(
-            sub_spec, xs, ys, mm=mm, tile=tile,
-            lookahead=lookahead, tune=tune,
-        )
-        slices.append(out.data)
-        if bblk not in masks:
-            masks[bblk] = out.mask
-    out_t = out  # the last sub-result: free tilings/grid template
+    sub_tilings = None
+    compiled_ok = (
+        getattr(mm, "compiled", True)
+        and getattr(mm, "_contract_cache", None) is not None
+        and not _any_traced(x.data, y.data)
+    )
+    if compiled_ok:
+        # Group batch elements by block signature: every group shares one
+        # sub-geometry, so the whole group runs as a *single* compiled
+        # program (static-unrolled slicing + per-slice product + stack)
+        # instead of a Python loop of dispatches.
+        groups: dict[tuple, list] = {}
+        for pos, bblk in enumerate(bblk_of_idx):
+            groups.setdefault(bblk, []).append(pos)
+        x_sym = _with_data(x, None)
+        y_sym = _with_data(y, None)
+        for bblk, positions in groups.items():
+            idx0 = all_idx[positions[0]]
+            sub_geom = _geometry_cached(
+                mm, sub_spec,
+                _slice(x, bx, idx0, bblk), _slice(y, by, idx0, bblk),
+                tile,
+            )
+            sub_tilings = sub_geom.out_tilings
+            masks[bblk] = (
+                sub_geom.out_mask if sub_geom.spec.out_modes else None
+            )
+            sub_shape = tuple(tt.extent for tt in sub_tilings)
+            group_idx = tuple(all_idx[p] for p in positions)
+
+            def build(
+                bblk=bblk, sub_geom=sub_geom, sub_shape=sub_shape,
+                group_idx=group_idx,
+            ):
+                def traced(xd, yd):
+                    _count_retrace(mm)
+                    xf = _with_data(x_sym, xd)
+                    yf = _with_data(y_sym, yd)
+                    outs = []
+                    for idx in group_idx:
+                        d = _execute_step(
+                            mm, sub_geom,
+                            _slice(xf, bx, idx, bblk),
+                            _slice(yf, by, idx, bblk),
+                            lookahead=lookahead, tune=tune,
+                        )
+                        outs.append(d.reshape(sub_shape))
+                    return jnp.stack(outs)
+
+                return jax.jit(traced)
+
+            key = (
+                "exec_batch", sub_geom.cache_key, bblk, group_idx,
+                str(x.data.dtype), str(y.data.dtype), lookahead, tune,
+            )
+            group_out = _cached_step(mm, key, build)(x.data, y.data)
+            for j, pos in enumerate(positions):
+                slices[pos] = group_out[j]
+    else:
+        for pos, (idx, bblk) in enumerate(zip(all_idx, bblk_of_idx)):
+            xs = _slice(x, bx, idx, bblk)
+            ys = _slice(y, by, idx, bblk)
+            out = contract(
+                sub_spec, xs, ys, mm=mm, tile=tile,
+                lookahead=lookahead, tune=tune,
+            )
+            slices[pos] = out.data
+            sub_tilings = out.tilings
+            if bblk not in masks:
+                masks[bblk] = out.mask
     stacked = jnp.stack(slices).reshape(
-        tuple(extents) + tuple(tt.extent for tt in out_t.tilings)
+        tuple(extents) + tuple(tt.extent for tt in sub_tilings)
     )
     cur = pspec.batch + out_free
     c_nd = jnp.transpose(
@@ -972,7 +1228,7 @@ def contract(
     if any(v is not None for v in masks.values()):
         bgrids = tuple(t.num_blocks for t in batch_tilings)
         free_grid = tuple(
-            dict(zip(out_free, out_t.tilings))[m].num_blocks
+            dict(zip(out_free, sub_tilings))[m].num_blocks
             for m in out_free
         ) if out_free else ()
         full = np.zeros(bgrids + free_grid, dtype=bool)
@@ -983,7 +1239,7 @@ def contract(
         )
         out_mask = full
     tmap = {**dict(zip(pspec.batch, batch_tilings)),
-            **dict(zip(out_free, out_t.tilings))}
+            **dict(zip(out_free, sub_tilings))}
     return BlockSparseTensor(
         data=c_nd,
         tilings=tuple(tmap[m] for m in pspec.out_modes),
@@ -1074,12 +1330,57 @@ def contract_chain(
         joint_default_s = joint.makespan_s
 
     # -- phase 3: execute with the chosen per-step windows --------------------
-    x_cur = norm[0][1]
-    for (spec, _x, y), geom, la in zip(norm, geoms, lookaheads):
-        data = _execute_step(mm, geom, x_cur, y, lookahead=int(la))
-        x_cur = BlockSparseTensor(
-            data=data, tilings=geom.out_tilings, mask=geom.out_mask
+    # The whole chain compiles into ONE program: intermediates live as
+    # XLA values inside the executable (zero host round-trips between
+    # steps, freed as soon as the next step consumes them).
+    import jax
+
+    x0 = norm[0][1]
+    ys = [y for _spec, _x, y in norm]
+    las = tuple(int(la) for la in lookaheads)
+    compiled_ok = (
+        getattr(mm, "compiled", True)
+        and getattr(mm, "_contract_cache", None) is not None
+        and all(g.cache_key is not None for g in geoms)
+        and x0.rank_csr is None
+        and not _any_traced(x0.data, *[y.data for y in ys])
+    )
+    if compiled_ok:
+        x0_sym = _with_data(x0, None)
+        y_syms = [_with_data(y, None) for y in ys]
+
+        def build():
+            def traced(x0d, *yds):
+                _count_retrace(mm)
+                x_cur = _with_data(x0_sym, x0d)
+                for geom, la, y_sym, yd in zip(geoms, las, y_syms, yds):
+                    data = _execute_step(
+                        mm, geom, x_cur, _with_data(y_sym, yd),
+                        lookahead=la,
+                    )
+                    x_cur = _with_data(_symbolic_out(geom), data)
+                return x_cur.data
+
+            return jax.jit(traced)
+
+        key = (
+            "exec_chain", tuple(g.cache_key for g in geoms), las,
+            str(x0.data.dtype), tuple(str(y.data.dtype) for y in ys),
         )
+        data = _cached_step(mm, key, build)(
+            x0.data, *[y.data for y in ys]
+        )
+        x_cur = BlockSparseTensor(
+            data=data, tilings=geoms[-1].out_tilings,
+            mask=geoms[-1].out_mask,
+        )
+    else:
+        x_cur = x0
+        for y, geom, la in zip(ys, geoms, las):
+            data = _execute_step_compiled(mm, geom, x_cur, y, lookahead=la)
+            x_cur = BlockSparseTensor(
+                data=data, tilings=geom.out_tilings, mask=geom.out_mask
+            )
 
     report = {
         "steps": [g.spec.spec for g in geoms],

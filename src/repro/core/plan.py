@@ -178,6 +178,56 @@ class MatmulPlan:
             return np.zeros((self.p_row, self.p_col), dtype=np.int64)
         return self.k_steps - self.device_live.sum(axis=2)
 
+    def digest(self) -> str:
+        """Stable content hash of every execution-relevant static field.
+
+        This is the executable-cache key (``core.summa``): two plans with
+        the same digest trace to the *same* jitted program — mesh devices,
+        grid axes, strategy, padded geometry, panel schedule, masks, rank
+        structure, local implementation and the resolved multiple-issue
+        window are all folded in.  Factor *values* of rank payloads are
+        deliberately absent (they are runtime operands, mirroring
+        ``rank_key``).  Memoized on the instance.
+        """
+        cached = self.__dict__.get("_digest")
+        if cached is not None:
+            return cached
+        cfg = self.cfg
+        devices = getattr(cfg.mesh, "devices", None)
+        if devices is None:  # plan-only fake meshes (never executed)
+            mesh_fp = ("abstract", repr(getattr(cfg.mesh, "shape", None)))
+        else:
+            darr = np.asarray(devices)
+            mesh_fp = (
+                darr.shape,
+                tuple(int(getattr(d, "id", -1)) for d in darr.ravel()),
+                tuple(getattr(cfg.mesh, "axis_names", ())),
+            )
+        h = hashlib.sha1()
+        h.update(
+            repr((
+                mesh_fp, cfg.row_axis, cfg.col_axis, cfg.strategy,
+                cfg.k_blocks, cfg.lookahead,
+                np.dtype(cfg.accum_dtype).name, cfg.local_matmul,
+                self.m, self.k, self.n, self.m_pad, self.k_pad,
+                self.n_pad, self.k_steps, self.kb_width,
+                self.live_panels, self.local_impl, self.local_block,
+                self.itemsize, self.lookahead, self.resolve_lookahead(),
+            )).encode()
+        )
+        for arr in (
+            self.a_mask, self.b_mask, self.device_live, self.local_cols,
+            self.a_ranks,
+        ):
+            if arr is None:
+                h.update(b"|none")
+            else:
+                h.update(b"|")
+                h.update(np.ascontiguousarray(arr).tobytes())
+        digest = h.hexdigest()
+        self.__dict__["_digest"] = digest  # frozen: write storage directly
+        return digest
+
     def summary(self) -> dict:
         """JSON-able digest for benchmarks / logging."""
         skipped = self.skipped_panels_per_device()

@@ -78,6 +78,9 @@ __all__ = [
     "summa_matmul",
     "summa_blocksparse_matmul",
     "summa_25d_matmul",
+    "executable_cache_stats",
+    "clear_executable_cache",
+    "warm_plan_executable",
 ]
 
 Strategy = Literal["procedural", "taskbased", "allgather"]
@@ -630,6 +633,68 @@ _EXEC_IMPLS: dict[str, Callable] = {
 
 
 # ---------------------------------------------------------------------------
+# The executable cache: plan-digest-keyed jitted programs
+# ---------------------------------------------------------------------------
+
+#: (kind, plan digest, local_impl, lookahead, dtypes, shapes) -> jitted fn.
+#: One entry per distinct static execution — repeated eager calls of the
+#: same plan dispatch a cached compiled program instead of re-tracing the
+#: interpreter loop op by op.
+_EXEC_CACHE: dict = {}
+_EXEC_STATS = {"hits": 0, "misses": 0, "retraces": 0}
+
+
+def executable_cache_stats() -> dict:
+    """Hit/miss/retrace counters + current size of the executable cache.
+
+    ``retraces`` counts actual jax trace executions of cached wrappers —
+    with stable plan digests and dtypes it must equal ``misses`` (every
+    program traced exactly once); a retrace without a miss means a cache
+    key is unstable."""
+    return {**_EXEC_STATS, "size": len(_EXEC_CACHE)}
+
+
+def clear_executable_cache() -> None:
+    """Drop every cached executable and zero the counters (tests)."""
+    _EXEC_CACHE.clear()
+    for k in _EXEC_STATS:
+        _EXEC_STATS[k] = 0
+
+
+def _is_traced(*arrays) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in arrays)
+
+
+def _cached_executable(key: tuple, build: Callable) -> Callable:
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        _EXEC_STATS["misses"] += 1
+        fn = build()
+        _EXEC_CACHE[key] = fn
+    else:
+        _EXEC_STATS["hits"] += 1
+    return fn
+
+
+def warm_plan_executable(plan, dtype, *, out_dtype: Any | None = None):
+    """Compile (and cache) the executable for ``plan`` ahead of use.
+
+    Drives the jitted wrapper with zero operands of the plan's padded
+    shapes — ``jax.jit``'s dispatch cache is populated by a real call, so
+    AOT lowering alone would not make the first production call cheap.
+    Rank-sparse plans need a factor payload and cannot be warmed here
+    (returns ``False``); everything else returns ``True``.
+    """
+    if plan.local_impl == "ranksparse":
+        return False
+    (mp, kp), (_, np_) = plan.padded_shapes
+    a = jnp.zeros((mp, kp), dtype)
+    b = jnp.zeros((kp, np_), dtype)
+    execute_plan(a, b, plan, out_dtype=out_dtype).block_until_ready()
+    return True
+
+
+# ---------------------------------------------------------------------------
 # Plan execution (the single entry into shard_map)
 # ---------------------------------------------------------------------------
 
@@ -640,20 +705,59 @@ def execute_plan(
     plan,
     *,
     out_dtype: Any | None = None,
+    compiled: bool = True,
 ) -> jax.Array:
     """Run C = A @ B according to a precomputed ``core.plan.MatmulPlan``.
 
     ``a``/``b`` must already be padded to ``plan.padded_shapes`` and
     sharded P(row_axis, col_axis).  Every public matmul entry point —
     dense, block-sparse, nonuniform — funnels through here.
+
+    Eager calls dispatch one cached jitted program per ``(plan digest,
+    dtypes)`` (``compiled=False`` opts out — the differential-oracle
+    harness compares the two routes).  Accumulators live entirely inside
+    the compiled program (XLA-managed buffers, freed on exit); operand
+    buffers are deliberately *not* donated, since callers routinely reuse
+    them across timing iterations.  Inside an enclosing ``jax.jit`` the
+    interpreter body inlines into the caller's trace unchanged.
     """
-    cfg = plan.cfg
+    _check_plan_operands(a, b, plan)
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+    if not compiled or _is_traced(a, b):
+        return _execute_plan_eager(a, b, plan, out_dtype=out_dtype)
+    key = (
+        "plan", plan.digest(), plan.local_impl, plan.resolve_lookahead(),
+        str(a.dtype), str(b.dtype), str(out_dtype),
+    )
+
+    def build():
+        def traced(a, b):
+            _EXEC_STATS["retraces"] += 1
+            return _execute_plan_eager(a, b, plan, out_dtype=out_dtype)
+
+        return jax.jit(traced)
+
+    return _cached_executable(key, build)(a, b)
+
+
+def _check_plan_operands(a, b, plan) -> None:
     (mp, kp), (_, np_) = plan.padded_shapes
     if a.shape != (mp, kp) or b.shape != (kp, np_):
         raise ValueError(
             f"operands {a.shape} @ {b.shape} do not match the plan's padded "
             f"shapes ({mp},{kp}) @ ({kp},{np_})"
         )
+
+
+def _execute_plan_eager(
+    a: jax.Array,
+    b: jax.Array,
+    plan,
+    *,
+    out_dtype: Any | None = None,
+) -> jax.Array:
+    """The strategy-interpreter body (trace-level; see ``execute_plan``)."""
+    cfg = plan.cfg
     out_dtype = out_dtype or a.dtype
     spec2 = P(cfg.row_axis, cfg.col_axis)
     if plan.a_mask is not None:
@@ -754,6 +858,7 @@ def execute_rank_plan(
     plan,
     *,
     out_dtype: Any | None = None,
+    compiled: bool = True,
 ) -> jax.Array:
     """Run C = A @ B with A given as factorized rank-sparse operands.
 
@@ -764,8 +869,36 @@ def execute_rank_plan(
     ``local_matmul="pallas"`` the gathered live panels run through the
     grouped-gemm kernel (kernels/grouped_gemm.py), stage 1 being the
     ragged per-rank V·B gemms.
+
+    Eager calls dispatch a cached jitted program keyed by the plan digest
+    + operand shapes/dtypes.  The factors are *runtime arguments*, never
+    trace constants — the digest (like ``plan.rank_key``) sees only the
+    rank structure, so baking values in would silently serve stale
+    factors to a same-structure payload.
     """
-    cfg = plan.cfg
+    out_dtype = jnp.dtype(out_dtype or b.dtype)
+    if compiled and not _is_traced(u, v, b):
+        _check_rank_operands(u, v, b, plan)  # eager, caller-friendly errors
+        key = (
+            "rank", plan.digest(), plan.resolve_lookahead(),
+            u.shape, v.shape, str(u.dtype), str(v.dtype), str(b.dtype),
+            str(out_dtype),
+        )
+
+        def build():
+            def traced(u, v, b):
+                _EXEC_STATS["retraces"] += 1
+                return _execute_rank_plan_eager(
+                    u, v, b, plan, out_dtype=out_dtype
+                )
+
+            return jax.jit(traced)
+
+        return _cached_executable(key, build)(u, v, b)
+    return _execute_rank_plan_eager(u, v, b, plan, out_dtype=out_dtype)
+
+
+def _check_rank_operands(u, v, b, plan) -> None:
     if plan.local_impl != "ranksparse":
         raise ValueError(
             f"plan.local_impl={plan.local_impl!r}: not a rank-sparse plan "
@@ -780,11 +913,29 @@ def execute_rank_plan(
     r_pad = k_r // plan.k_steps
     (mp, kp), (_, np_) = plan.padded_shapes
     m_blk_p = v.shape[0] // r_pad
-    if u.shape[0] != mp or v.shape != (m_blk_p * r_pad, kp) or b.shape != (kp, np_):
+    if (
+        u.shape[0] != mp
+        or v.shape != (m_blk_p * r_pad, kp)
+        or b.shape != (kp, np_)
+    ):
         raise ValueError(
             f"factor operands u{u.shape}/v{v.shape}/b{b.shape} do not "
             f"match the plan's padded shapes ({mp},{kp}) @ ({kp},{np_})"
         )
+
+
+def _execute_rank_plan_eager(
+    u: jax.Array,
+    v: jax.Array,
+    b: jax.Array,
+    plan,
+    *,
+    out_dtype: Any | None = None,
+) -> jax.Array:
+    """The factorized-interpreter body (see ``execute_rank_plan``)."""
+    cfg = plan.cfg
+    _check_rank_operands(u, v, b, plan)  # shapes are static under a trace
+    r_pad = u.shape[1] // plan.k_steps
     out_dtype = out_dtype or b.dtype
     spec2 = P(cfg.row_axis, cfg.col_axis)
     if plan.b_mask is not None:
@@ -897,24 +1048,42 @@ def summa_25d_matmul(
             f"k_blocks={k_steps} so each replica owns an equal K sub-range"
         )
     per_rep = k_steps // c_rep
-    out_dtype = out_dtype or a.dtype
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
 
-    def fn(a_loc, b_loc):
-        k_start = jax.lax.axis_index(rep_axis) * per_rep
-        c_acc = _exec_taskbased(
-            a_loc, b_loc, plan, k_steps=per_rep, k_start=k_start
-        )
-        c_acc = jax.lax.psum(c_acc, rep_axis)
-        return c_acc.astype(out_dtype)
+    def run(a, b):
+        def fn(a_loc, b_loc):
+            k_start = jax.lax.axis_index(rep_axis) * per_rep
+            c_acc = _exec_taskbased(
+                a_loc, b_loc, plan, k_steps=per_rep, k_start=k_start
+            )
+            c_acc = jax.lax.psum(c_acc, rep_axis)
+            return c_acc.astype(out_dtype)
 
-    spec2 = P(cfg.row_axis, cfg.col_axis)  # no rep_axis: replicated operands
-    return shard_map(
-        fn,
-        mesh=cfg.mesh,
-        in_specs=(spec2, spec2),
-        out_specs=spec2,
-        check_vma=False,
-    )(a, b)
+        # no rep_axis in the specs: replicated operands
+        spec2 = P(cfg.row_axis, cfg.col_axis)
+        return shard_map(
+            fn,
+            mesh=cfg.mesh,
+            in_specs=(spec2, spec2),
+            out_specs=spec2,
+            check_vma=False,
+        )(a, b)
+
+    if _is_traced(a, b):
+        return run(a, b)
+    key = (
+        "25d", plan.digest(), rep_axis, per_rep,
+        str(a.dtype), str(b.dtype), str(out_dtype),
+    )
+
+    def build():
+        def traced(a, b):
+            _EXEC_STATS["retraces"] += 1
+            return run(a, b)
+
+        return jax.jit(traced)
+
+    return _cached_executable(key, build)(a, b)
 
 
 # ---------------------------------------------------------------------------

@@ -49,7 +49,7 @@ __all__ = [
 
 
 def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
-                      prompt_len: int):
+                      prompt_len: int, *, warm_executables: bool = True):
     """Pre-derive the SUMMA ``MatmulPlan``s for every projection shape the
     serving traces will request — prefill flattens (B, S, D) activations
     to M = B*S rows, decode to M = B — so the jitted prefill/decode paths
@@ -58,8 +58,14 @@ def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
     With ``matmul_strategy="auto"`` each plan is additionally *tuned*
     (repro.sched.tuner): the simulator search over lookahead x k_blocks x
     strategy runs here, once per shape, instead of inside the trace.
+    With ``warm_executables`` (default) each warmed plan is also driven
+    through ``core.summa``'s plan-digest-keyed executable cache at the
+    serving dtype, so the first production matmul per shape dispatches a
+    pre-compiled program instead of paying the trace+compile there.
     Returns the warmed plans; no-op (empty) on the plain-einsum path.
     """
+    from repro.core import summa as sm
+
     if not ctx.has_mesh or ctx.matmul_strategy == "xla" or ctx.pure_dp:
         return []
     d = cfg.d_model
@@ -77,7 +83,11 @@ def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
                         m, k_in, n_out, itemsize=itemsize, tune=tune
                     )
                 )
-    return [p for p in plans if p is not None]
+    plans = [p for p in plans if p is not None]
+    if warm_executables:
+        for p in {id(p): p for p in plans}.values():
+            sm.warm_plan_executable(p, jnp.dtype(cfg.dtype))
+    return plans
 
 
 def cache_len(cfg: ModelConfig, max_len: int) -> int:

@@ -125,14 +125,16 @@ def oracle_case(family: str, *, m=64, k=128, n=96, blocks=8, seed=0) -> dict:
 
 
 def run_strategy(case: dict, mesh, strategy: str, *, row_axis="data",
-                 col_axis="model") -> np.ndarray:
+                 col_axis="model", compiled: bool = True) -> np.ndarray:
     """Execute one oracle case with one strategy on ``mesh``.
 
     ``procedural``/``taskbased``/``allgather`` go through
     ``DistributedMatmul``; ``auto`` is the tuner-driven route
     (``tune=True``); ``ring`` is the sparsity-blind collective matmul
     (``dist.collective_matmul.allgather_matmul``) fed structure-zeroed
-    operands, since it takes no masks by design.
+    operands, since it takes no masks by design.  ``compiled=False``
+    forces the eager plan interpreters (bypassing the executable cache)
+    for compiled-vs-eager differential tests; ``ring`` ignores it.
     """
     import jax.numpy as jnp
 
@@ -162,6 +164,7 @@ def run_strategy(case: dict, mesh, strategy: str, *, row_axis="data",
         row_axis=row_axis,
         col_axis=col_axis,
         strategy="taskbased" if tune else strategy,
+        compiled=compiled,
     )
     if case["a_ranks"] is not None:
         out = mm(
@@ -279,12 +282,17 @@ def contract_case(name: str, *, seed: int = 0) -> dict:
 
 
 def run_contract(case: dict, mesh, *, row_axis="data",
-                 col_axis="model") -> np.ndarray:
-    """Execute one contraction case on ``mesh`` through the front-end."""
+                 col_axis="model", compiled: bool = True) -> np.ndarray:
+    """Execute one contraction case on ``mesh`` through the front-end.
+
+    ``compiled=False`` forces the eager per-step execution path
+    (bypassing the contraction executable cache) so tests can compare
+    compiled vs eager results bitwise."""
     from repro.core import DistributedMatmul
 
     mm = DistributedMatmul(
-        mesh, row_axis=row_axis, col_axis=col_axis, strategy="taskbased"
+        mesh, row_axis=row_axis, col_axis=col_axis, strategy="taskbased",
+        compiled=compiled,
     )
     out = mm.contract(
         case["spec"], case["x"], case["y"], tile=case["tile"]

@@ -131,6 +131,46 @@ def test_contract_oracle_sweep_2x4(subproc):
 
 
 # ---------------------------------------------------------------------------
+# compiled executables vs eager interpreters: bitwise differential
+#
+# The executable cache (core/summa.py + core/contract.py) must be a pure
+# dispatch optimization: the jitted program and the eager interpreter
+# trace the same jnp ops, so their outputs must match bitwise — any
+# drift means the compiled closure baked in stale state.
+# ---------------------------------------------------------------------------
+
+#: ring bypasses DistributedMatmul entirely, so it has no compiled twin
+COMPILED_STRATEGIES = tuple(s for s in ORACLE_STRATEGIES if s != "ring")
+
+
+@pytest.mark.parametrize("strategy", COMPILED_STRATEGIES)
+@pytest.mark.parametrize("family", ORACLE_FAMILIES)
+def test_compiled_matches_eager_1x1(family, strategy):
+    mesh = make_host_mesh(1, 1)
+    case = oracle_case(family, seed=9)
+    got_compiled = run_strategy(case, mesh, strategy)
+    got_eager = run_strategy(case, mesh, strategy, compiled=False)
+    np.testing.assert_array_equal(
+        got_compiled, got_eager,
+        err_msg=f"compiled != eager: {family}/{strategy}/1x1",
+    )
+    check_case(case, got_compiled, f"compiled:{family}/{strategy}/1x1")
+
+
+@pytest.mark.parametrize("family", CONTRACT_SPECS)
+def test_contract_compiled_matches_eager_1x1(family):
+    mesh = make_host_mesh(1, 1)
+    case = contract_case(family, seed=9)
+    got_compiled = run_contract(case, mesh)
+    got_eager = run_contract(case, mesh, compiled=False)
+    np.testing.assert_array_equal(
+        got_compiled, got_eager,
+        err_msg=f"contract compiled != eager: {family}/1x1",
+    )
+    check_contract_case(case, got_compiled, f"compiled:{family}/1x1")
+
+
+# ---------------------------------------------------------------------------
 # acceptance: plan FLOPs scale with average block rank
 # ---------------------------------------------------------------------------
 
