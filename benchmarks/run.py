@@ -766,6 +766,176 @@ def bench_contract(json_path: str) -> None:
     print(f"# wrote {json_path}", flush=True)
 
 
+def bench_spgemm(json_path: str) -> None:
+    """Sparse x sparse (SpGEMM) planning sweep -> BENCH_spgemm.json.
+
+    A fill x fill grid of block masks on a 16x16-block product
+    (m = k = n = 1024, one block per virtual device of a 16x16 grid):
+
+    * output-structure-aware pruning — gemm tasks of the A-structure-only
+      plan vs the plan that also sees B's mask and the symbolic output
+      mask (``repro.spgemm.output_mask``); the aware plan must never emit
+      more tasks, and strictly fewer on the banded entries;
+    * pull vs broadcast — total comm bytes and simulated makespan of the
+      one-sided fetch DAG vs the panel-broadcast DAG on the virtual
+      16x16 grid; pull must move strictly fewer bytes on the banded
+      entries and strictly *more* on the dense entry (the crossover);
+    * measured correctness — both comm modes execute on the local host
+      mesh and must land within 1e-3 relative residual of the float64
+      numpy oracle.
+
+    The acceptance booleans ride in the JSON (CI asserts them).
+    """
+    import json
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import DistributedMatmul
+    from repro.core.plan import plan_matmul
+    from repro.core.sparsity import banded_block_mask, random_block_mask
+    from repro.launch.mesh import make_host_mesh
+    from repro.sched import abstract_summa_config, from_plan, simulate
+    from repro.spgemm import output_mask
+
+    blk = 16  # block grid == virtual device grid (one C block per device)
+    n = 1024
+    cfg = abstract_summa_config(blk, blk, strategy="taskbased")
+    mesh = make_host_mesh(1, 1)
+    mm = DistributedMatmul(mesh, strategy="taskbased", k_blocks=blk)
+    rng = np.random.default_rng(0)
+
+    cases = [
+        ("banded_bw0", banded_block_mask(blk, blk, 0),
+         banded_block_mask(blk, blk, 0)),
+        ("banded_bw1", banded_block_mask(blk, blk, 1),
+         banded_block_mask(blk, blk, 1)),
+    ]
+    for f in (0.05, 0.1, 0.2, 0.4):
+        cases.append((
+            f"random_f{int(f * 100):02d}",
+            random_block_mask(blk, blk, f, seed=1),
+            random_block_mask(blk, blk, f, seed=2),
+        ))
+    cases.append(
+        ("dense", np.ones((blk, blk), bool), np.ones((blk, blk), bool))
+    )
+
+    def gemms(graph):
+        return sum(
+            1 for t in graph.tasks if t.kind == "gemm" and t.flops > 0
+        )
+
+    def comm_bytes(graph):
+        return float(
+            sum(t.bytes for t in graph.tasks if t.resource == "comm")
+        )
+
+    a64 = rng.standard_normal((n, n))
+    b64 = rng.standard_normal((n, n))
+    a32 = jnp.asarray(a64, jnp.float32)
+    b32 = jnp.asarray(b64, jnp.float32)
+    bs = n // blk
+
+    entries = []
+    for name, amask, bmask in cases:
+        cmask = output_mask(amask, bmask)
+        p_aonly = plan_matmul(n, n, n, cfg, a_mask=amask)
+        p_aware = plan_matmul(
+            n, n, n, cfg, a_mask=amask, b_mask=bmask, c_mask=cmask
+        )
+        p_pull = plan_matmul(
+            n, n, n, cfg, a_mask=amask, b_mask=bmask, c_mask=cmask,
+            comm_mode="pull",
+        )
+        g_aonly = from_plan(p_aonly)
+        g_aware = from_plan(p_aware)
+        g_pull = from_plan(p_pull)
+        sim_bcast = simulate(g_aware)
+        sim_pull = simulate(g_pull)
+
+        # measured: both comm modes on the host mesh vs the f64 oracle
+        fine_a = np.kron(amask, np.ones((bs, bs), bool))
+        fine_b = np.kron(bmask, np.ones((bs, bs), bool))
+        ref = np.where(fine_a, a64, 0.0) @ np.where(fine_b, b64, 0.0)
+        scale = max(1.0, float(np.abs(ref).max()))
+        res = {}
+        for mode in ("broadcast", "pull"):
+            out = _block(mm(
+                a32, b32, a_mask=amask, b_mask=bmask, c_mask=cmask,
+                comm_mode=mode,
+            ))
+            res[mode] = float(
+                np.abs(np.asarray(out, np.float64) - ref).max()
+            ) / scale
+
+        sparse = name != "dense"
+        banded = name.startswith("banded")
+        entry = {
+            "name": name,
+            "fill_a": float(amask.mean()),
+            "fill_b": float(bmask.mean()),
+            "fill_c": float(cmask.mean()),
+            "grid": [blk, blk],
+            "shape": [n, n, n],
+            "gemms_a_only": gemms(g_aonly),
+            "gemms_aware": gemms(g_aware),
+            "bytes_modeled_bcast": p_aware.cost.comm_bytes.get("taskbased"),
+            "bytes_modeled_pull": p_pull.cost.comm_bytes.get("pull"),
+            "bytes_graph_bcast": comm_bytes(g_aware),
+            "bytes_graph_pull": comm_bytes(g_pull),
+            "makespan_bcast_s": sim_bcast.makespan_s,
+            "makespan_pull_s": sim_pull.makespan_s,
+            "pull_speedup_sim": (
+                sim_bcast.makespan_s / sim_pull.makespan_s
+                if sim_pull.makespan_s > 0 else 1.0
+            ),
+            "residual_broadcast": res["broadcast"],
+            "residual_pull": res["pull"],
+            "aware_not_worse": bool(gemms(g_aware) <= gemms(g_aonly)),
+            "aware_strictly_prunes": bool(
+                gemms(g_aware) < gemms(g_aonly)
+            ),
+            "pull_fewer_bytes": bool(
+                comm_bytes(g_pull) < comm_bytes(g_aware)
+            ),
+            "residual_ok": bool(max(res.values()) < 1e-3),
+        }
+        entries.append(entry)
+        _row(
+            f"spgemm_{name}", sim_bcast.makespan_s * 1e6,
+            f"gemms={entry['gemms_aware']}/{entry['gemms_a_only']};"
+            f"pull_bytes={entry['bytes_graph_pull']:.0f};"
+            f"bcast_bytes={entry['bytes_graph_bcast']:.0f};"
+            f"res={max(res.values()):.1e}",
+        )
+
+        # acceptance: output-aware planning never loses, and wins
+        # strictly on the banded entries; pull's one-sided fetches beat
+        # broadcast exactly where fill is low (and lose at dense — the
+        # crossover the simulator prices via owner-clock contention)
+        assert entry["aware_not_worse"], name
+        if sparse:
+            assert entry["residual_ok"], (name, res)
+        if banded:
+            assert entry["aware_strictly_prunes"], name
+            assert entry["pull_fewer_bytes"], name
+        if not sparse:
+            assert not entry["pull_fewer_bytes"], name
+            assert entry["residual_ok"], (name, res)
+
+    with open(json_path, "w") as f:
+        json.dump(
+            {
+                "bench": "spgemm",
+                "entries": entries,
+                "cache_stats": mm.cache_stats(),
+            },
+            f, indent=2,
+        )
+    print(f"# wrote {json_path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -773,10 +943,11 @@ def main() -> None:
     ap.add_argument("--sched-json", default="BENCH_sched.json")
     ap.add_argument("--ranksparse-json", default="BENCH_ranksparse.json")
     ap.add_argument("--contract-json", default="BENCH_contract.json")
+    ap.add_argument("--spgemm-json", default="BENCH_spgemm.json")
     ap.add_argument(
         "--only",
         help="comma-separated list of JSON-writing sections to run "
-        "(ranksparse, sched, summa, contract), e.g. "
+        "(ranksparse, sched, summa, contract, spgemm), e.g. "
         "--only summa,contract (CI artifact jobs)",
     )
     args = ap.parse_args()
@@ -785,6 +956,7 @@ def main() -> None:
         "sched": lambda: bench_sched(args.sched_json),
         "ranksparse": lambda: bench_ranksparse(args.ranksparse_json),
         "contract": lambda: bench_contract(args.contract_json),
+        "spgemm": lambda: bench_spgemm(args.spgemm_json),
     }
     if args.only is not None:
         names = [s.strip() for s in args.only.split(",") if s.strip()]
@@ -807,6 +979,7 @@ def main() -> None:
     bench_sched(args.sched_json)
     bench_ranksparse(args.ranksparse_json)
     bench_contract(args.contract_json)
+    bench_spgemm(args.spgemm_json)
     bench_blocksparse()
     bench_strategies()
     bench_weak_scaling(args.quick)

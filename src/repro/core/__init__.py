@@ -25,6 +25,7 @@ from repro.core.sparsity import (
     RankCSR,
     banded_block_mask,
     block_csr_from_mask,
+    block_diag_block_mask,
     block_rank_flops,
     decay_block_mask,
     decay_rank_map,

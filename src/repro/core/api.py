@@ -125,38 +125,55 @@ class DistributedMatmul:
         a_mask: np.ndarray | None = None,
         b_mask: np.ndarray | None = None,
         a_ranks: BlockRankMap | RankCSR | None = None,
+        b_ranks: BlockRankMap | RankCSR | None = None,
+        c_mask: np.ndarray | None = None,
         strategy: str | None = None,
         itemsize: int = 4,
         tune: bool = False,
         lookahead: int | None = None,
+        comm_mode: str = "broadcast",
+        stationarity: str = "C",
     ) -> MatmulPlan:
         """The (cached) execution plan for a (M, K) x (K, N) product.
 
         ``a_ranks`` (a ``BlockRankMap`` or ``RankCSR``) plans A as
         block-rank-sparse: costs/schedule follow the per-block ranks.  The
         cache key digests the *rank structure*, not factor values — two
-        ``RankCSR`` with the same ranks share a plan.  ``tune=True`` runs
-        the schedule autotuner (repro.sched.tuner) over the plan: the
-        cached result carries the simulated-makespan-optimal strategy /
-        k_blocks / lookahead instead of the static config.  ``lookahead``
-        pins the per-plan multiple-issue window explicitly (the chain
-        scheduler uses this to execute jointly tuned windows); it
-        overrides a tuned window.
+        ``RankCSR`` with the same ranks share a plan.  ``b_ranks`` is B's
+        structure (rank-aware pruning; B stays dense-stored) and
+        ``c_mask`` the output block filter — the sparse x sparse planning
+        inputs of ``repro.spgemm``, like ``comm_mode`` ("broadcast" |
+        "pull") and ``stationarity`` ("C" | "A" | "B" | "auto").
+        ``tune=True`` runs the schedule autotuner (repro.sched.tuner)
+        over the plan: the cached result carries the
+        simulated-makespan-optimal strategy / k_blocks / lookahead /
+        comm mode instead of the static config.  ``lookahead`` pins the
+        per-plan multiple-issue window explicitly (the chain scheduler
+        uses this to execute jointly tuned windows); it overrides a tuned
+        window.
         """
         rank_payload = isinstance(a_ranks, RankCSR)
         key = (
             m, k, n, mask_key(a_mask), mask_key(b_mask), rank_key(a_ranks),
             rank_payload, strategy or self.strategy, itemsize, tune,
-            lookahead,
+            lookahead, rank_key(b_ranks), mask_key(c_mask), comm_mode,
+            stationarity,
         )
         plan = self._plan_cache.get(key)
         if plan is None:
             self._cache_stats["plan_misses"] += 1
             rank_map = a_ranks.rank_map() if rank_payload else a_ranks
+            b_rank_map = (
+                b_ranks.rank_map()
+                if isinstance(b_ranks, RankCSR)
+                else b_ranks
+            )
             plan = plan_matmul(
                 m, k, n, self.config(strategy),
                 a_mask=a_mask, b_mask=b_mask, a_ranks=rank_map,
-                rank_payload=rank_payload, itemsize=itemsize,
+                b_ranks=b_rank_map, c_mask=c_mask,
+                rank_payload=rank_payload, comm_mode=comm_mode,
+                stationarity=stationarity, itemsize=itemsize,
             )
             if tune:
                 from repro.sched.tuner import tune_plan  # deferred: no cycle
@@ -211,9 +228,13 @@ class DistributedMatmul:
         a_mask: np.ndarray | None = None,
         b_mask: np.ndarray | None = None,
         a_ranks: BlockRankMap | RankCSR | None = None,
+        b_ranks: BlockRankMap | RankCSR | None = None,
+        c_mask: np.ndarray | None = None,
         strategy: str | None = None,
         tune: bool = False,
         lookahead: int | None = None,
+        comm_mode: str = "broadcast",
+        stationarity: str = "C",
     ) -> jax.Array:
         """C = A @ B.  ``a_ranks`` plans A block-rank-sparse:
 
@@ -224,6 +245,13 @@ class DistributedMatmul:
         * a bare ``BlockRankMap`` refines the cost model / schedule only —
           ``a`` must be the dense-stored operand and execution runs the
           masked DAG over the ``rank > 0`` mask.
+
+        SpGEMM planning inputs (``repro.spgemm``): ``b_ranks`` gives B's
+        structure rank-aware (B stays dense-stored), ``c_mask`` filters
+        the output block grid (dead C blocks are pruned from the schedule
+        and zeroed in the result), ``comm_mode="pull"`` plans one-sided
+        panel fetches, ``stationarity="auto"`` lets the comm-volume
+        chooser pick the stationary operand.
         """
         if a_mask is not None and a_ranks is not None:
             # same rule the planner enforces for the BlockRankMap path —
@@ -240,8 +268,9 @@ class DistributedMatmul:
                     "RankCSR.to_dense() if you meant the dense product)"
                 )
             return self._call_ranksparse(
-                a_ranks, b, b_mask=b_mask, strategy=strategy, tune=tune,
-                lookahead=lookahead,
+                a_ranks, b, b_mask=b_mask, b_ranks=b_ranks, c_mask=c_mask,
+                strategy=strategy, tune=tune, lookahead=lookahead,
+                comm_mode=comm_mode, stationarity=stationarity,
             )
         if a is None:
             raise ValueError("a=None requires a_ranks to be a RankCSR")
@@ -251,8 +280,9 @@ class DistributedMatmul:
             raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
         plan = self.plan(
             m, k, n, a_mask=a_mask, b_mask=b_mask, a_ranks=a_ranks,
-            strategy=strategy, itemsize=a.dtype.itemsize, tune=tune,
-            lookahead=lookahead,
+            b_ranks=b_ranks, c_mask=c_mask, strategy=strategy,
+            itemsize=a.dtype.itemsize, tune=tune, lookahead=lookahead,
+            comm_mode=comm_mode, stationarity=stationarity,
         )
         (mp, kp), (_, np_) = plan.padded_shapes
         a_p = _pad_to_shape(a, (mp, kp))
@@ -288,9 +318,13 @@ class DistributedMatmul:
         b: jax.Array,
         *,
         b_mask: np.ndarray | None = None,
+        b_ranks: BlockRankMap | RankCSR | None = None,
+        c_mask: np.ndarray | None = None,
         strategy: str | None = None,
         tune: bool = False,
         lookahead: int | None = None,
+        comm_mode: str = "broadcast",
+        stationarity: str = "C",
     ) -> jax.Array:
         m, k = a_ranks.shape
         k2, n = b.shape
@@ -299,8 +333,10 @@ class DistributedMatmul:
                 f"contraction mismatch {a_ranks.shape} @ {b.shape}"
             )
         plan = self.plan(
-            m, k, n, b_mask=b_mask, a_ranks=a_ranks, strategy=strategy,
+            m, k, n, b_mask=b_mask, b_ranks=b_ranks, c_mask=c_mask,
+            a_ranks=a_ranks, strategy=strategy,
             itemsize=b.dtype.itemsize, tune=tune, lookahead=lookahead,
+            comm_mode=comm_mode, stationarity=stationarity,
         )
         (mp, kp), (_, np_) = plan.padded_shapes
         b_p = _pad_to_shape(b, (kp, np_))

@@ -516,6 +516,10 @@ class _StepGeometry:
     uniform: bool  # all three merged tilings uniform
     out_tilings: tuple[bk.Tiling, ...]
     out_mask: np.ndarray | None
+    #: matricized inferred C mask (spgemm symbolic pass) — fed to the
+    #: planner as ``c_mask`` on the uniform path so dead output blocks
+    #: never emit gemm tasks; ``out_mask`` is its un-matricized twin
+    c_mask2: np.ndarray | None
     out_row_perm_inv: np.ndarray | None
     out_col_perm_inv: np.ndarray | None
     tile: int
@@ -629,16 +633,22 @@ def _step_geometry(
         np.ones(tuple(yt[m].num_blocks for m in spec.y_modes), bool)
         if y_plain else y.block_mask
     )
+    cm2 = None
     if x_plain and y_plain:
         out_mask = None
     else:
+        # the symbolic pass is the single source of truth for the
+        # inferred output structure — plan_matmul's dead-output pruning
+        # consumes the same boolean product (repro.spgemm)
+        from repro.spgemm import output_mask as _output_mask
+
         am = matricize_mask(
             xmask, spec.x_modes, spec.free_x, spec.contracted
-        ).astype(np.int64)
+        )
         bm = matricize_mask(
             ymask, spec.y_modes, spec.contracted, spec.free_y
-        ).astype(np.int64)
-        cm2 = (am @ bm) > 0
+        )
+        cm2 = _output_mask(am, bm)
         out_mask = unmatricize_mask(
             cm2, spec.free_x, spec.free_y, grids, spec.out_modes
         )
@@ -652,6 +662,7 @@ def _step_geometry(
         uniform=uniform,
         out_tilings=out_tilings,
         out_mask=out_mask,
+        c_mask2=cm2,
         out_row_perm_inv=_invert(x_geom.row_perm),
         out_col_perm_inv=_invert(y_geom.col_perm),
         tile=tile,
@@ -731,6 +742,18 @@ def _nonuniform_rank_map(geom: _StepGeometry, x: BlockSparseTensor):
     return None
 
 
+def _step_c_mask(geom: _StepGeometry) -> np.ndarray | None:
+    """The inferred output mask worth forwarding to the planner.
+
+    An all-live product carries no pruning information — forwarding it
+    would only perturb plan digests (and recompile cached executables)
+    for zero benefit, so only genuinely sparse outputs pass through."""
+    cm = geom.c_mask2
+    if cm is None or bool(cm.all()):
+        return None
+    return cm
+
+
 def _plan_step(mm, geom: _StepGeometry, x: BlockSparseTensor, itemsize=4):
     """The MatmulPlan this step will execute (for chain scheduling)."""
     m = geom.x_geom.row_tiling.extent
@@ -744,14 +767,14 @@ def _plan_step(mm, geom: _StepGeometry, x: BlockSparseTensor, itemsize=4):
     if x.rank_csr is not None:
         return mm.plan(
             m, k, n, b_mask=geom.b_mask2, a_ranks=x.rank_csr,
-            itemsize=itemsize,
+            c_mask=_step_c_mask(geom), itemsize=itemsize,
         )
     a_ranks = geom.a_ranks2 if isinstance(
         geom.a_ranks2, BlockRankMap
     ) else None
     return mm.plan(
         m, k, n, a_mask=geom.a_mask2, b_mask=geom.b_mask2,
-        a_ranks=a_ranks, itemsize=itemsize,
+        a_ranks=a_ranks, c_mask=_step_c_mask(geom), itemsize=itemsize,
     )
 
 
@@ -800,7 +823,7 @@ def _execute_step(
             )
         c2 = mm(
             None, b2, a_ranks=x.rank_csr, b_mask=geom.b_mask2,
-            lookahead=lookahead, tune=tune,
+            c_mask=_step_c_mask(geom), lookahead=lookahead, tune=tune,
         )
     else:
         a2 = geom.x_geom.matricize(x.data)
@@ -811,7 +834,7 @@ def _execute_step(
             a2, b2,
             a_mask=geom.a_mask2 if a_ranks is None else None,
             b_mask=geom.b_mask2, a_ranks=a_ranks,
-            lookahead=lookahead, tune=tune,
+            c_mask=_step_c_mask(geom), lookahead=lookahead, tune=tune,
         )
     fx_ext, fy_ext = _free_extents(geom, x, y)
     return _unmatricize_step(c2, geom, fx_ext, fy_ext)
@@ -963,6 +986,7 @@ def _execute_step_compiled(
         n = geom.y_geom.col_tiling.extent
         plan = mm.plan(
             m, k, n, b_mask=geom.b_mask2, a_ranks=x.rank_csr,
+            c_mask=_step_c_mask(geom),
             itemsize=np.dtype(y.data.dtype).itemsize, tune=tune,
             lookahead=lookahead,
         )

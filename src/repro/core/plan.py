@@ -133,6 +133,24 @@ class MatmulPlan:
     # Search record attached by ``repro.sched.tuner.tune_plan`` (winning
     # strategy/k_blocks/lookahead, simulated makespan, static baseline).
     tuned: dict | None = None
+    # -- SpGEMM extensions (repro.spgemm) ------------------------------------
+    # Padded (K_blk, N_blk) int32 per-block ranks of B.  Structure-only
+    # planning input: B stays dense-stored (``b_mask`` is ``b_ranks > 0``),
+    # the ranks refine modeled broadcast volume and the stationarity choice.
+    b_ranks: np.ndarray | None = None
+    # Padded (M_blk, N_blk) output block mask.  When set, gemm tasks whose
+    # C block is dead are pruned from ``device_live`` and execution zeroes
+    # the dead output blocks (the mask is an output *filter*).
+    c_mask: np.ndarray | None = None
+    # Panel transport: "broadcast" (panel broadcast along grid rows/cols,
+    # today's pipeline) or "pull" (one-sided fetch of exactly the panels
+    # this device's surviving gemms read — RDMA-SpGEMM style; fetch tasks
+    # contend on the owner's clock in the simulator).
+    comm_mode: str = "broadcast"
+    # Which operand stays put: "C" (today's SUMMA layout), or "A"/"B"
+    # (transposed layouts with a final C reduce-scatter — DBCSR-style;
+    # ``repro.spgemm.stationarity`` chooses under ``stationarity="auto"``).
+    stationarity: str = "C"
 
     # -- geometry -----------------------------------------------------------
 
@@ -213,11 +231,12 @@ class MatmulPlan:
                 self.n_pad, self.k_steps, self.kb_width,
                 self.live_panels, self.local_impl, self.local_block,
                 self.itemsize, self.lookahead, self.resolve_lookahead(),
+                self.comm_mode, self.stationarity,
             )).encode()
         )
         for arr in (
             self.a_mask, self.b_mask, self.device_live, self.local_cols,
-            self.a_ranks,
+            self.a_ranks, self.b_ranks, self.c_mask,
         ):
             if arr is None:
                 h.update(b"|none")
@@ -237,6 +256,8 @@ class MatmulPlan:
             "grid": [self.p_row, self.p_col],
             "strategy": self.cfg.strategy,
             "local_impl": self.local_impl,
+            "comm_mode": self.comm_mode,
+            "stationarity": self.stationarity,
             "k_steps": self.k_steps,
             "kb_width": self.kb_width,
             "live_panels": len(self.live_panels),
@@ -380,6 +401,7 @@ def _comm_model(
     p_col: int,
     itemsize: int,
     a_live_elems: float | None = None,
+    b_live_elems: float | None = None,
 ) -> dict:
     """Modeled per-device collective bytes for each execution strategy.
 
@@ -396,14 +418,19 @@ def _comm_model(
     ``a_live_elems`` overrides the A-side broadcast volume (summed over
     live panels): rank-sparse plans broadcast *factor* panels whose bytes
     follow the per-panel ranks, not the dense panel area.
+    ``b_live_elems`` is the B-side mirror: block-sparse B panels move only
+    their surviving blocks (mean over grid columns, summed over live
+    panels) — same sizing the task graph's ``bcast_b`` tasks use.
     """
     del k_steps  # liveness already folded into `live`
     # psum/all_gather over a size-1 axis moves nothing — gate each
     # operand's term on its broadcast axis actually having peers.
     if a_live_elems is None:
         a_live_elems = float(m_loc * kb_width * live)
+    if b_live_elems is None:
+        b_live_elems = float(kb_width * n_loc * live)
     bcast = 2.0 * itemsize * (
-        a_live_elems * (p_col > 1) + kb_width * n_loc * live * (p_row > 1)
+        a_live_elems * (p_col > 1) + b_live_elems * (p_row > 1)
     )
     allgather = itemsize * (
         m_loc * k_pad * (p_col - 1) / max(p_col, 1)
@@ -418,6 +445,168 @@ def _comm_model(
     }
 
 
+def b_panel_live_elems(
+    b_mask: np.ndarray | None,
+    b_ranks: np.ndarray | None,
+    *,
+    bk_sz: int,
+    bn_sz: int,
+    p_col: int,
+) -> np.ndarray | None:
+    """(k_steps, p_col) surviving B-panel elements per grid column.
+
+    The single sizing both ``PlanCost`` and the task graph's ``bcast_b``
+    / ``fetch_b`` tasks use: panel ``kk``'s slab for grid column ``j``
+    carries only its live blocks (rank-structured blocks charge their
+    factor footprint past nothing — ``min(r (bk + bn), bk bn)``, the
+    travel bound ``spgemm.structure.live_elems`` documents).  ``None``
+    when the block grid does not align with the device columns (the full
+    panel is the only honest answer then).
+    """
+    if b_mask is None:
+        return None
+    k_steps, n_blk = b_mask.shape
+    if n_blk % p_col:
+        return None
+    nb_loc = n_blk // p_col
+    out = np.zeros((k_steps, p_col))
+    for j in range(p_col):
+        sl = slice(j * nb_loc, (j + 1) * nb_loc)
+        if b_ranks is None:
+            out[:, j] = b_mask[:, sl].sum(axis=1) * float(bk_sz * bn_sz)
+        else:
+            elems = np.minimum(
+                b_ranks[:, sl].astype(np.int64) * (bk_sz + bn_sz),
+                bk_sz * bn_sz,
+            ) * b_mask[:, sl]
+            out[:, j] = elems.sum(axis=1).astype(np.float64)
+    return out
+
+
+def _refine_device_live_c(
+    device_live: np.ndarray,
+    a_mask: np.ndarray,
+    b_mask: np.ndarray,
+    c_mask: np.ndarray,
+    p_row: int,
+    p_col: int,
+) -> np.ndarray:
+    """Output-structure refinement of per-device panel liveness.
+
+    Device (i, j) needs panel ``kk`` only if some addend ``A[mb, kk] @
+    B[kk, nb]`` lands in a *live* C block of its tile — the symbolic
+    contribution test ``a & b & c``.  Falls back to the input liveness
+    when either block grid does not align with the device grid.
+    """
+    m_blk = a_mask.shape[0]
+    n_blk = b_mask.shape[1]
+    if m_blk % p_row or n_blk % p_col:
+        return device_live
+    mb_loc = m_blk // p_row
+    nb_loc = n_blk // p_col
+    out = device_live.copy()
+    a64 = a_mask.astype(np.int64)
+    b64 = b_mask.astype(np.int64)
+    c64 = c_mask.astype(np.int64)
+    for i in range(p_row):
+        am_i = a64[i * mb_loc : (i + 1) * mb_loc, :]
+        for j in range(p_col):
+            bm_j = b64[:, j * nb_loc : (j + 1) * nb_loc]
+            cm_ij = c64[
+                i * mb_loc : (i + 1) * mb_loc,
+                j * nb_loc : (j + 1) * nb_loc,
+            ]
+            contrib = np.einsum("mk,kn,mn->k", am_i, bm_j, cm_ij)
+            out[i, j, :] &= contrib > 0
+    return out
+
+
+def _pull_comm_bytes(
+    device_live: np.ndarray,
+    live: list[int],
+    *,
+    k_steps: int,
+    m_loc: int,
+    kb_width: int,
+    n_loc: int,
+    p_row: int,
+    p_col: int,
+    itemsize: int,
+    b_live_cols: np.ndarray | None,
+) -> float:
+    """Modeled per-device comm bytes of the one-sided pull schedule.
+
+    Every surviving (device, panel) pair fetches its A panel from the
+    owning grid column and its B slab from the owning grid row, at factor
+    1.0 (a one-sided get moves the payload once — no allreduce doubling).
+    A fetch occupies *both* endpoints' comm clocks (receiver and owner,
+    which is where owner contention appears in the simulator), so the
+    per-device mean occupancy is twice the total fetched bytes over the
+    device count.  Pull undercuts broadcast once the live-receiver count
+    per owner drops below the broadcast factor — the RDMA-SpGEMM
+    crossover the 16x16-grid sweep validates.
+    """
+    t_a = max(k_steps // p_col, 1)
+    t_b = max(k_steps // p_row, 1)
+    total = 0.0
+    for kk in live:
+        owner_col = kk // t_a
+        owner_row = kk // t_b
+        for i in range(p_row):
+            for j in range(p_col):
+                if not device_live[i, j, kk]:
+                    continue
+                if p_col > 1 and j != owner_col:
+                    total += m_loc * kb_width * itemsize
+                if p_row > 1 and i != owner_row:
+                    b_elems = (
+                        float(b_live_cols[kk, j])
+                        if b_live_cols is not None
+                        else float(kb_width * n_loc)
+                    )
+                    total += b_elems * itemsize
+    return 2.0 * total / max(p_row * p_col, 1)
+
+
+def _resolve_stationarity(
+    a_struct,
+    b_struct,
+    *,
+    m: int,
+    k: int,
+    n: int,
+    p_row: int,
+    p_col: int,
+    itemsize: int,
+    stationarity: str,
+    c_structure=None,
+) -> tuple[str, dict[str, float]]:
+    """Resolve ``stationarity="auto"`` through the spgemm chooser and
+    return ``(choice, modeled total volumes)`` either way.  Lazy import:
+    ``repro.spgemm`` sits downstream of ``core`` in the import graph."""
+    from repro.spgemm.stationarity import (
+        STATIONARITIES,
+        choose_stationarity,
+        stationarity_comm_volumes,
+    )
+
+    if stationarity == "auto":
+        return choose_stationarity(
+            a_struct, b_struct, m=m, k=k, n=n, p_row=p_row, p_col=p_col,
+            itemsize=itemsize, c_structure=c_structure,
+        )
+    if stationarity not in STATIONARITIES:
+        raise ValueError(
+            f"stationarity={stationarity!r}: one of "
+            f"{STATIONARITIES + ('auto',)}"
+        )
+    vols = stationarity_comm_volumes(
+        a_struct, b_struct, m=m, k=k, n=n, p_row=p_row, p_col=p_col,
+        itemsize=itemsize, c_structure=c_structure,
+    )
+    return stationarity, vols
+
+
 def plan_matmul(
     m: int,
     k: int,
@@ -427,7 +616,11 @@ def plan_matmul(
     a_mask: np.ndarray | None = None,
     b_mask: np.ndarray | None = None,
     a_ranks: BlockRankMap | None = None,
+    b_ranks: BlockRankMap | None = None,
+    c_mask: np.ndarray | None = None,
     rank_payload: bool = True,
+    comm_mode: str = "broadcast",
+    stationarity: str = "C",
     itemsize: int = 4,
 ) -> MatmulPlan:
     """Plan C = A @ B on ``cfg``'s grid; the single schedule source.
@@ -442,12 +635,32 @@ def plan_matmul(
     has no factor payload (dense-stored A, rank map for useful-work
     accounting and pruning only): the plan then schedules — and the task
     graph / tuner model — the masked DAG it will actually execute, not
-    the factored pipeline.  Returns a plan whose ``padded_shapes`` the
-    caller pads operands to before ``core.summa.execute_plan`` (or
-    ``execute_rank_plan`` for factorized operands).
+    the factored pipeline.
+
+    SpGEMM extensions (``repro.spgemm``): ``b_ranks`` is B's
+    structure-only rank map (replaces ``b_mask``; B stays dense-stored);
+    ``c_mask`` is the output block mask — gemm tasks whose C block is
+    dead are pruned from the per-device liveness and execution zeroes the
+    dead output blocks; ``comm_mode="pull"`` plans one-sided panel
+    fetches instead of broadcasts (needs block structure, C-stationary
+    only); ``stationarity`` picks which operand stays put ("auto" runs
+    the comm-volume chooser over C/A/B).
+
+    Returns a plan whose ``padded_shapes`` the caller pads operands to
+    before ``core.summa.execute_plan`` (or ``execute_rank_plan`` for
+    factorized operands).
     """
     if m <= 0 or k <= 0 or n <= 0:
         raise ValueError(f"bad shape ({m},{k})x({k},{n})")
+    if comm_mode not in ("broadcast", "pull"):
+        raise ValueError(
+            f"comm_mode={comm_mode!r}: one of ('broadcast', 'pull')"
+        )
+    if comm_mode == "pull" and stationarity not in ("C", "auto"):
+        raise ValueError(
+            "comm_mode='pull' is a C-stationary pipeline; plan pull and "
+            "A-/B-stationary schedules separately"
+        )
     p_row, p_col = cfg.p_row, cfg.p_col
     if a_ranks is not None:
         if a_mask is not None:
@@ -459,8 +672,28 @@ def plan_matmul(
                 f"a_ranks tiles {a_ranks.shape}, expected ({m},{k})"
             )
         a_mask = a_ranks.mask
+    if b_ranks is not None:
+        if b_mask is not None:
+            raise ValueError("pass either b_mask or b_ranks for B, not both")
+        if hasattr(b_ranks, "rank_map"):  # RankCSR and friends
+            b_ranks = b_ranks.rank_map()
+        if b_ranks.shape != (k, n):
+            raise ValueError(
+                f"b_ranks tiles {b_ranks.shape}, expected ({k},{n})"
+            )
+        b_mask = b_ranks.mask
     masked = a_mask is not None or b_mask is not None
+    if c_mask is not None:
+        c_mask = np.asarray(c_mask, dtype=bool)
+        if not masked:
+            raise ValueError(
+                "c_mask needs block structure on A or B to prune against"
+            )
     if not masked:
+        if comm_mode == "pull":
+            raise ValueError(
+                "comm_mode='pull' needs block structure to size fetches"
+            )
         kmult = math.lcm(p_row, p_col)
         if cfg.k_blocks:
             kmult = math.lcm(kmult, cfg.k_blocks)
@@ -475,15 +708,24 @@ def plan_matmul(
                 f"({k_pad // p_col}, {k_pad // p_row})"
             )
         m_loc, n_loc = m_pad // p_row, n_pad // p_col
+        stationarity, stat_vols = _resolve_stationarity(
+            None, None, m=m_pad, k=k_pad, n=n_pad, p_row=p_row, p_col=p_col,
+            itemsize=itemsize, stationarity=stationarity,
+        )
         flops = 2.0 * m_pad * k_pad * n_pad
+        comm = _comm_model(
+            m_loc=m_loc, n_loc=n_loc, k_pad=k_pad, kb_width=kb_width,
+            live=k_steps, k_steps=k_steps, p_row=p_row, p_col=p_col,
+            itemsize=itemsize,
+        )
+        p_all = max(p_row * p_col, 1)
+        comm["c_stationary"] = stat_vols["C"] / p_all
+        comm["a_stationary"] = stat_vols["A"] / p_all
+        comm["b_stationary"] = stat_vols["B"] / p_all
         cost = PlanCost(
             flops_dense=flops,
             flops_sparse=flops,
-            comm_bytes=_comm_model(
-                m_loc=m_loc, n_loc=n_loc, k_pad=k_pad, kb_width=kb_width,
-                live=k_steps, k_steps=k_steps, p_row=p_row, p_col=p_col,
-                itemsize=itemsize,
-            ),
+            comm_bytes=comm,
             fill_in=1.0,
             flops_mask=flops,
         )
@@ -494,6 +736,7 @@ def plan_matmul(
             a_mask=None, b_mask=None, device_live=None,
             local_cols=None, local_block=None, local_impl="dense",
             cost=cost, itemsize=itemsize,
+            comm_mode=comm_mode, stationarity=stationarity,
         )
 
     # -- masked path ---------------------------------------------------------
@@ -502,10 +745,16 @@ def plan_matmul(
     # padding minimal and the kernel block size large); otherwise a single
     # block-per-element fallback so padding stays at the grid minimum.
     if a_mask is None:
-        m_blocks = p_row if m % p_row == 0 else m
+        if c_mask is not None and m % c_mask.shape[0] == 0:
+            m_blocks = c_mask.shape[0]  # match the output filter's grid
+        else:
+            m_blocks = p_row if m % p_row == 0 else m
         a_mask = np.ones((m_blocks, np.asarray(b_mask).shape[0]), dtype=bool)
     if b_mask is None:
-        n_blocks = p_col if n % p_col == 0 else n
+        if c_mask is not None and n % c_mask.shape[1] == 0:
+            n_blocks = c_mask.shape[1]
+        else:
+            n_blocks = p_col if n % p_col == 0 else n
         b_mask = np.ones((np.asarray(a_mask).shape[1], n_blocks), dtype=bool)
     a_mask = np.asarray(a_mask, dtype=bool)
     b_mask = np.asarray(b_mask, dtype=bool)
@@ -519,6 +768,11 @@ def plan_matmul(
         raise ValueError(
             f"masks {a_mask.shape}/{b_mask.shape} must evenly block "
             f"({m},{k})x({k},{n})"
+        )
+    if c_mask is not None and c_mask.shape != (m_blk, n_blk):
+        raise ValueError(
+            f"c_mask {c_mask.shape} must match the output block grid "
+            f"({m_blk},{n_blk})"
         )
     bm_sz, bk_sz, bn_sz = m // m_blk, k // k_blk, n // n_blk
     # Padded shapes stay block-divisible AND grid-divisible; K additionally
@@ -535,18 +789,54 @@ def plan_matmul(
     )
     m_blk_p = m_pad // bm_sz
 
-    local_cols = None
-    local_block = None
-    local_impl = "masked"
+    c_mask_p = None
+    if c_mask is not None:
+        c_mask_p = _pad_block_mask(c_mask, (m_pad // bm_sz, n_pad // bn_sz))
+        # Dead-output pruning: drop gemm tasks whose C block the output
+        # filter kills, then re-derive the live panel set.
+        device_live = _refine_device_live_c(
+            device_live, a_mask_p, b_mask_p, c_mask_p, p_row, p_col
+        )
+        live = [kk for kk in live if device_live[:, :, kk].any()]
+
     a_ranks_p = None
     if a_ranks is not None:
         a_ranks_p = np.zeros((m_pad // bm_sz, k_pad // bk_sz), np.int32)
         a_ranks_p[: a_ranks.m_blocks, : a_ranks.k_blocks] = a_ranks.ranks
+    b_ranks_p = None
+    if b_ranks is not None:
+        b_ranks_p = np.zeros((k_pad // bk_sz, n_pad // bn_sz), np.int32)
+        b_ranks_p[: b_ranks.m_blocks, : b_ranks.k_blocks] = b_ranks.ranks
+
+    a_struct = (
+        BlockRankMap(ranks=a_ranks_p, bm=bm_sz, bk=bk_sz)
+        if a_ranks_p is not None
+        else a_mask_p
+    )
+    b_struct = (
+        BlockRankMap(ranks=b_ranks_p, bm=bk_sz, bk=bn_sz)
+        if b_ranks_p is not None
+        else b_mask_p
+    )
+    stationarity, stat_vols = _resolve_stationarity(
+        a_struct, b_struct, m=m_pad, k=k_pad, n=n_pad,
+        p_row=p_row, p_col=p_col, itemsize=itemsize,
+        stationarity=stationarity, c_structure=c_mask_p,
+    )
+
+    local_cols = None
+    local_block = None
+    local_impl = "masked"
+    # The specialized local executors (factored rank pipeline, Pallas BSMM)
+    # exist only for the default broadcast / C-stationary pipeline; pull
+    # fetches and A-/B-stationary schedules run the masked DAG.
+    plain_pipeline = comm_mode == "broadcast" and stationarity == "C"
+    if a_ranks_p is not None:
         # The factor layout (U panels of uniform width, V rows batched per
         # local block row) needs a payload and row blocks aligned to the
         # grid; otherwise execution (and therefore the schedule model) is
         # the dense-stored masked DAG.
-        if rank_payload and m_blk_p % p_row == 0:
+        if rank_payload and m_blk_p % p_row == 0 and plain_pipeline:
             local_impl = "ranksparse"
     # BSMM needs row blocks aligned to the grid and big enough to make a
     # sane kernel block (>= 8 rows: TPU sublane minimum).
@@ -555,6 +845,7 @@ def plan_matmul(
         and live
         and m_blk_p % p_row == 0
         and bm_sz >= 8
+        and plain_pipeline
     ):
         local_cols = _local_csr_cols(a_mask_p, b_col, live, p_row, p_col)
         local_block = (bm_sz, kb_width, _pick_bn(n_pad // p_col))
@@ -562,6 +853,11 @@ def plan_matmul(
 
     sparse, dense = mask_matmul_flops(a_mask_p, b_mask_p, bm_sz, bk_sz, bn_sz)
     m_loc, n_loc = m_pad // p_row, n_pad // p_col
+    if c_mask_p is not None:
+        # Useful flops count only the (i, kk) x (kk, j) pairs whose output
+        # block survives the filter.
+        pairs = a_mask_p.astype(np.int64) @ b_mask_p.astype(np.int64)
+        sparse = 2.0 * bm_sz * bk_sz * bn_sz * float(pairs[c_mask_p].sum())
     mask_flops = float(sparse)
     a_live_elems = None
     if a_ranks_p is not None:
@@ -590,14 +886,35 @@ def plan_matmul(
                     a_live_elems += m_loc * r_k + mb_loc * r_k * bk_sz
                 else:
                     a_live_elems += m_loc * bk_sz
+    b_live_cols = b_panel_live_elems(
+        b_mask_p, b_ranks_p, bk_sz=bk_sz, bn_sz=bn_sz, p_col=p_col
+    )
+    b_live_elems = None
+    if b_live_cols is not None:
+        b_live_elems = (
+            float(b_live_cols[np.asarray(live, dtype=int)].mean(axis=1).sum())
+            if live
+            else 0.0
+        )
+    comm = _comm_model(
+        m_loc=m_loc, n_loc=n_loc, k_pad=k_pad, kb_width=kb_width,
+        live=len(live), k_steps=k_steps, p_row=p_row, p_col=p_col,
+        itemsize=itemsize, a_live_elems=a_live_elems,
+        b_live_elems=b_live_elems,
+    )
+    comm["pull"] = _pull_comm_bytes(
+        device_live, live, k_steps=k_steps, m_loc=m_loc, kb_width=kb_width,
+        n_loc=n_loc, p_row=p_row, p_col=p_col, itemsize=itemsize,
+        b_live_cols=b_live_cols,
+    )
+    p_all = max(p_row * p_col, 1)
+    comm["c_stationary"] = stat_vols["C"] / p_all
+    comm["a_stationary"] = stat_vols["A"] / p_all
+    comm["b_stationary"] = stat_vols["B"] / p_all
     cost = PlanCost(
         flops_dense=float(dense),
         flops_sparse=float(sparse),
-        comm_bytes=_comm_model(
-            m_loc=m_loc, n_loc=n_loc, k_pad=k_pad, kb_width=kb_width,
-            live=len(live), k_steps=k_steps, p_row=p_row, p_col=p_col,
-            itemsize=itemsize, a_live_elems=a_live_elems,
-        ),
+        comm_bytes=comm,
         fill_in=float(sparse) / float(dense) if dense else 0.0,
         flops_mask=mask_flops,
     )
@@ -607,5 +924,6 @@ def plan_matmul(
         a_mask=a_mask_p, b_mask=b_mask_p, device_live=device_live,
         local_cols=local_cols, local_block=local_block,
         local_impl=local_impl, cost=cost, itemsize=itemsize,
-        a_ranks=a_ranks_p,
+        a_ranks=a_ranks_p, b_ranks=b_ranks_p, c_mask=c_mask_p,
+        comm_mode=comm_mode, stationarity=stationarity,
     )

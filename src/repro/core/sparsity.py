@@ -29,6 +29,7 @@ import numpy as np
 __all__ = [
     "random_block_mask",
     "banded_block_mask",
+    "block_diag_block_mask",
     "decay_block_mask",
     "BlockCSR",
     "block_csr_from_mask",
@@ -101,6 +102,15 @@ def banded_block_mask(m_blocks: int, n_blocks: int, bandwidth: int) -> np.ndarra
     j = np.arange(n_blocks)[None, :]
     scale = m_blocks / n_blocks
     return np.abs(i - j * scale) <= bandwidth
+
+
+def block_diag_block_mask(m_blocks: int, n_blocks: int) -> np.ndarray:
+    """Block-diagonal structure: block (i, j) lives iff it sits on the
+    (scaled) diagonal — the disconnected-fragment limit of a banded mask
+    (``bandwidth=0``), named separately because SpGEMM products of two
+    block-diagonal operands stay block-diagonal (closed under the
+    symbolic product, the sharpest output-structure pruning case)."""
+    return banded_block_mask(m_blocks, n_blocks, 0)
 
 
 def _decay_factors(

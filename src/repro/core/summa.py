@@ -37,6 +37,13 @@ strategies below are *plan interpreters*:
   dead for this grid row/column are never loaded or multiplied, so local
   FLOPs scale with the per-device fill-in, finer than global pruning.
 
+* ``_exec_sparse_pull`` — the one-sided SpGEMM route
+  (``plan.comm_mode="pull"``, repro.spgemm): gather-by-index emulation
+  of RDMA panel gets; the fetch cost model lives in the task graph.
+  A-/B-stationary plans (``plan.stationarity``) run a single local
+  contraction with a C reduce-scatter instead of the K pipeline, and
+  ``plan.c_mask`` zeroes dead output blocks on every route.
+
 Broadcast realisation: a panel broadcast from its owner is expressed as a
 masked ``psum`` ("broadcast-as-allreduce"), the standard static-SPMD
 idiom.  It costs ~2× the bytes of an optimal tree broadcast; the
@@ -395,6 +402,32 @@ def _exec_sparse_dag(a_loc, b_loc, plan):
     a_parts, b_parts = _bcast_live_panels(a_loc, b_loc, plan)
     for a_bc, b_bc in zip(a_parts, b_parts):
         c = _local_dot(a_bc, b_bc, c, cfg)
+    return c
+
+
+def _exec_sparse_pull(a_loc, b_loc, plan):
+    """One-sided pull route (``plan.comm_mode == "pull"``).
+
+    RDMA-SpGEMM-style gets (each surviving gemm pulling exactly the
+    panels it reads from their owners) are not expressible in static
+    SPMD, so this route *emulates* them: one all-gather per operand, then
+    static indexed reads of exactly the live panels — dead panels are
+    never touched by compute.  The fetch-level cost model (factor-1.0
+    bytes, owner-clock contention) lives in ``sched.taskgraph`` /
+    ``sched.simulator``.  Numerically this accumulates the same panels in
+    the same order as the masked DAG, so pull and broadcast plans pin
+    bitwise-equal in the differential oracle.
+    """
+    cfg = plan.cfg
+    kb = plan.kb_width
+    m_loc, n_loc = a_loc.shape[0], b_loc.shape[1]
+    a_full = jax.lax.all_gather(a_loc, cfg.col_axis, axis=1, tiled=True)
+    b_full = jax.lax.all_gather(b_loc, cfg.row_axis, axis=0, tiled=True)
+    c = jnp.zeros((m_loc, n_loc), cfg.accum_dtype)
+    for kk in plan.live_panels:
+        a_panel = jax.lax.slice_in_dim(a_full, kk * kb, (kk + 1) * kb, axis=1)
+        b_panel = jax.lax.slice_in_dim(b_full, kk * kb, (kk + 1) * kb, axis=0)
+        c = _local_dot(a_panel, b_panel, c, cfg)
     return c
 
 
@@ -765,6 +798,38 @@ def _execute_plan_eager(
         a = _apply_block_mask(a, plan.a_mask)
         b = _apply_block_mask(b, plan.b_mask)
 
+    if getattr(plan, "stationarity", "C") != "C":
+        # A-/B-stationary schedules (repro.spgemm): the stationary operand
+        # keeps its canonical (row, col) layout; the other is re-laid-out
+        # with K over the opposite grid axis and consumed in place; the
+        # per-device partials reduce-scatter (bandwidth-optimal, factor 1)
+        # into C's canonical layout.  No K pipeline — masked operands are
+        # already zeroed above, so structure still prunes arithmetic work
+        # at the value level.
+        if plan.stationarity == "A":
+            in_specs = (spec2, P(cfg.col_axis, None))
+            scatter_axis, scatter_dim = cfg.col_axis, 1
+        else:
+            in_specs = (P(None, cfg.row_axis), spec2)
+            scatter_axis, scatter_dim = cfg.row_axis, 0
+
+        def fn_stat(a_loc, b_loc):
+            c0 = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), cfg.accum_dtype)
+            part = _local_dot(a_loc, b_loc, c0, cfg)
+            c = jax.lax.psum_scatter(
+                part, scatter_axis, scatter_dimension=scatter_dim, tiled=True
+            )
+            return c.astype(out_dtype)
+
+        out = shard_map(
+            fn_stat,
+            mesh=cfg.mesh,
+            in_specs=in_specs,
+            out_specs=spec2,
+            check_vma=False,
+        )(a, b)
+        return _filter_c(out, plan)
+
     if plan.local_impl == "bsmm":
         cols = jnp.asarray(plan.local_cols)
         cols_spec = P(cfg.row_axis, cfg.col_axis, None, None)
@@ -773,43 +838,51 @@ def _execute_plan_eager(
             c = _exec_sparse_bsmm(a_loc, b_loc, cols_loc[0, 0], plan)
             return c.astype(out_dtype)
 
-        return shard_map(
+        out = shard_map(
             fn_bsmm,
             mesh=cfg.mesh,
             in_specs=(spec2, spec2, cols_spec),
             out_specs=spec2,
             check_vma=False,
         )(a, b, cols)
+        return _filter_c(out, plan)
 
     if plan.local_impl in ("masked", "ranksparse"):
         # Rank plans given dense-stored operands run the masked DAG: the
         # ranks informed the cost model / scheduler, but without factors
         # there is nothing rank-sized to multiply (execute_rank_plan is
         # the factorized path).
+        run = (
+            _exec_sparse_pull
+            if getattr(plan, "comm_mode", "broadcast") == "pull"
+            else _exec_sparse_dag
+        )
 
         def fn_masked(a_loc, b_loc):
-            return _exec_sparse_dag(a_loc, b_loc, plan).astype(out_dtype)
+            return run(a_loc, b_loc, plan).astype(out_dtype)
 
-        return shard_map(
+        out = shard_map(
             fn_masked,
             mesh=cfg.mesh,
             in_specs=(spec2, spec2),
             out_specs=spec2,
             check_vma=False,
         )(a, b)
+        return _filter_c(out, plan)
 
     local = _EXEC_IMPLS[cfg.strategy]
 
     def fn_dense(a_loc, b_loc):
         return local(a_loc, b_loc, plan).astype(out_dtype)
 
-    return shard_map(
+    out = shard_map(
         fn_dense,
         mesh=cfg.mesh,
         in_specs=(spec2, spec2),
         out_specs=spec2,
         check_vma=False,
     )(a, b)
+    return _filter_c(out, plan)
 
 
 def rank_operands(a_ranks, plan) -> tuple[np.ndarray, np.ndarray]:
@@ -950,13 +1023,14 @@ def _execute_rank_plan_eager(
         c = local(u_loc, v_loc, b_loc, plan, r_pad=r_pad)
         return c.astype(out_dtype)
 
-    return shard_map(
+    out = shard_map(
         fn_rank,
         mesh=cfg.mesh,
         in_specs=(spec2, spec2, spec2),
         out_specs=spec2,
         check_vma=False,
     )(u, v, b)
+    return _filter_c(out, plan)
 
 
 # ---------------------------------------------------------------------------
@@ -1126,6 +1200,17 @@ def summa_blocksparse_matmul(
             f"padding to {plan.padded_shapes}; use core.api.DistributedMatmul"
         )
     return execute_plan(a, b, plan, out_dtype=out_dtype)
+
+
+def _filter_c(out: jax.Array, plan) -> jax.Array:
+    """Apply the plan's output filter: dead C blocks are zeroed, so an
+    execution can never populate blocks the output structure excludes
+    (numerically significant when ``c_mask`` is narrower than the
+    symbolic ``a (.) b`` product)."""
+    c_mask = getattr(plan, "c_mask", None)
+    if c_mask is not None:
+        out = _apply_block_mask(out, c_mask)
+    return out
 
 
 def _apply_block_mask(x: jax.Array, mask: np.ndarray) -> jax.Array:

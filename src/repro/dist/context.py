@@ -159,7 +159,8 @@ class ParallelCtx:
         return self._mm_cache
 
     def plan_projection(
-        self, m: int, d_in: int, d_out: int, *, itemsize=4, tune=False
+        self, m: int, d_in: int, d_out: int, *, itemsize=4, tune=False,
+        stationarity: str = "C",
     ):
         """Pre-build (and cache) the plan for an (m, d_in)x(d_in, d_out)
         projection — call outside jit so traced call paths (scanned
@@ -167,7 +168,9 @@ class ParallelCtx:
         re-deriving the schedule at trace time.  No-op on the xla path.
         ``tune=True`` additionally runs the schedule autotuner (what the
         ``"auto"`` strategy executes), so the simulator search also
-        happens outside tracing.
+        happens outside tracing.  ``stationarity`` forwards to the
+        planner (``"auto"`` lets the comm-volume model pick the
+        A-/B-/C-stationary schedule, repro.spgemm).
         """
         if (
             not self.has_mesh
@@ -180,4 +183,5 @@ class ParallelCtx:
             b_mask=self.weight_mask((d_in, d_out)),
             itemsize=itemsize,
             tune=tune,
+            stationarity=stationarity,
         )

@@ -8,7 +8,12 @@ runs for a duration the :class:`MachineModel` derives from its FLOP /
 byte cost.  Collective tasks (broadcasts, gathers) occupy the comm unit
 of *every* group member, so a straggler delays the whole group — the
 load-imbalance propagation that the multiple-issue window (encoded as
-dependency edges by ``taskgraph``) exists to absorb.
+dependency edges by ``taskgraph``) exists to absorb.  One-sided
+``fetch_a``/``fetch_b`` tasks (pull mode, repro.spgemm) list
+``(receiver, owner)`` as their devices, so every fetch serializes on the
+*owner's* comm clock as well — many requesters of one hot panel queue
+there, which is exactly the pull-vs-broadcast crossover the 16 x 16+
+virtual-grid experiments measure.
 
 Outputs: makespan, per-device busy/idle split, imbalance ratio,
 pipeline-efficiency, and a Chrome-trace (``chrome://tracing`` /

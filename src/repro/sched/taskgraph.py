@@ -53,7 +53,10 @@ class Task:
     simulator converts them to time through a ``MachineModel``."""
 
     tid: int
-    kind: str  # "bcast_a" | "bcast_b" | "gather_a" | "gather_b" | "gemm" | "accum"
+    # "bcast_a" | "bcast_b" | "gather_a" | "gather_b" | "fetch_a" |
+    # "fetch_b" | "gemm" | "accum"; fetch tasks (one-sided pull) occupy
+    # (receiver, owner) so requesters contend on the owner's comm clock
+    kind: str
     step: int  # schedule position of the iteration (-1: not per-iteration)
     devices: tuple[int, ...]  # flat device ids whose resource this occupies
     resource: str  # "comm" | "compute"
@@ -252,6 +255,84 @@ def _emit_pipeline(
         accum_hist.append(dict(prev_accum))
 
 
+def _emit_pull_pipeline(
+    b: _Builder,
+    *,
+    n_steps: int,
+    lookahead: int,
+    owner_col,  # (step,) -> grid column owning the A panel
+    owner_row,  # (step,) -> grid row owning the B panel
+    a_fetch_bytes,  # (step, grid_row) -> bytes of one A-panel fetch
+    b_fetch_bytes,  # (step, grid_col) -> bytes of one B-panel fetch
+    gemm_flops,  # (step, i, j) -> rank-k update FLOPs (0: dead, no task)
+    accum_flops,  # (i, j) -> accumulate FLOPs per iteration
+) -> None:
+    """The one-sided variant of :func:`_emit_pipeline` (RDMA-SpGEMM).
+
+    No broadcast trees: each *surviving* gemm pulls exactly the panels it
+    reads straight from their owners, at factor-1.0 bytes (a get moves
+    the payload once).  A fetch occupies both endpoints — receiver and
+    owner — on the comm resource, so many requesters of one hot panel
+    serialize on the owner's clock; that contention, against broadcast's
+    2x-bytes-but-parallel trees, is the crossover the simulator resolves.
+    Dead gemms fetch nothing, which is where pull wins as fill drops.
+    Window semantics match :func:`_emit_pipeline` (paper Eq. 1).
+    """
+    p_row, p_col = b.p_row, b.p_col
+    accum_hist: list[dict[int, int]] = []
+    prev_accum: dict[int, int] = {}
+    for t in range(n_steps):
+        window: dict[int, int] = (
+            accum_hist[t - lookahead] if t >= lookahead else {}
+        )
+        oc, orow = owner_col(t), owner_row(t)
+        step_accum: dict[int, int] = {}
+        for i in range(p_row):
+            for j in range(p_col):
+                d = b.dev(i, j)
+                flops = gemm_flops(t, i, j)
+                if flops <= 0:
+                    # dead iteration: no fetch, no gemm; the window still
+                    # advances (carry previous task).
+                    if d in prev_accum:
+                        step_accum[d] = prev_accum[d]
+                    continue
+                deps = []
+                if p_col > 1 and j != oc:
+                    owner = b.dev(i, oc)
+                    bytes_ = a_fetch_bytes(t, i)
+                    if bytes_ > 0:
+                        fdeps = [
+                            window[x] for x in sorted({d, owner})
+                            if x in window
+                        ]
+                        deps.append(b.add(
+                            "fetch_a", t, (d, owner), "comm", deps=fdeps,
+                            bytes=bytes_,
+                        ))
+                if p_row > 1 and i != orow:
+                    owner = b.dev(orow, j)
+                    bytes_ = b_fetch_bytes(t, j)
+                    if bytes_ > 0:
+                        fdeps = [
+                            window[x] for x in sorted({d, owner})
+                            if x in window
+                        ]
+                        deps.append(b.add(
+                            "fetch_b", t, (d, owner), "comm", deps=fdeps,
+                            bytes=bytes_,
+                        ))
+                if d in prev_accum:
+                    deps.append(prev_accum[d])  # C-tile RAW dependency
+                g = b.add("gemm", t, (d,), "compute", deps=deps, flops=flops)
+                step_accum[d] = b.add(
+                    "accum", t, (d,), "compute", deps=(g,),
+                    flops=accum_flops(i, j),
+                )
+        prev_accum = {**prev_accum, **step_accum}
+        accum_hist.append(dict(prev_accum))
+
+
 # ---------------------------------------------------------------------------
 # builder 1: from a MatmulPlan
 # ---------------------------------------------------------------------------
@@ -339,6 +420,7 @@ def from_plan(
         "shape": [plan.m, plan.k, plan.n],
         "grid": [p_row, p_col],
         "local_impl": plan.local_impl,
+        "comm_mode": getattr(plan, "comm_mode", "broadcast"),
         "a_owner": [int(kk // t_a) for kk in steps],
     }
 
@@ -397,14 +479,54 @@ def from_plan(
 
         def gemm_flops(t, i, j):
             return float(step_flops[i, j, t])
+    elif plan.local_impl == "masked" and plan.device_live is not None:
+        # Output-structure-aware pruning (repro.spgemm): a gemm whose C
+        # tile is dead for this panel — no surviving (a, b, c) block
+        # triple on the device — is never emitted.
+        dense_panel = 2.0 * m_loc * kb * n_loc
+
+        def gemm_flops(t, i, j):
+            return dense_panel if plan.device_live[i, j, steps[t]] else 0.0
     else:
-        # dense — and "masked", whose DAG executor runs dense panel dots
-        # on masked operands: a device whose C tile is dead for this
-        # panel still executes it.
+        # dense: every device executes every panel
         dense_panel = 2.0 * m_loc * kb * n_loc
 
         def gemm_flops(t, i, j):
             return dense_panel
+
+    # B-panel bytes from *surviving* blocks (mirroring the A side): a
+    # mostly-dead panel column broadcasts only its live blocks.
+    b_live = None
+    if p_row > 1 and getattr(plan, "b_mask", None) is not None:
+        from repro.core.plan import b_panel_live_elems
+
+        bn_sz = plan.n_pad // plan.b_mask.shape[1]
+        b_live = b_panel_live_elems(
+            plan.b_mask, getattr(plan, "b_ranks", None),
+            bk_sz=kb, bn_sz=bn_sz, p_col=p_col,
+        )
+
+    if getattr(plan, "comm_mode", "broadcast") == "pull":
+        if plan.local_impl != "masked" or plan.device_live is None:
+            raise ValueError("pull graphs need a masked plan")
+        t_b = max(plan.k_steps // p_row, 1)
+        meta["b_owner"] = [int(kk // t_b) for kk in steps]
+        _emit_pull_pipeline(
+            b,
+            n_steps=n_steps,
+            lookahead=window,
+            owner_col=lambda t: int(steps[t] // t_a),
+            owner_row=lambda t: int(steps[t] // t_b),
+            a_fetch_bytes=lambda t, i: float(m_loc * kb * itemsize),
+            b_fetch_bytes=lambda t, j: (
+                float(b_live[steps[t], j]) * itemsize
+                if b_live is not None
+                else float(kb * n_loc * itemsize)
+            ),
+            gemm_flops=gemm_flops,
+            accum_flops=lambda i, j: float(m_loc * n_loc),
+        )
+        return b.graph(n_steps, window, meta)
 
     a_panel_bytes = BCAST_FACTOR * m_loc * kb * itemsize if p_col > 1 else 0.0
     b_panel_bytes = BCAST_FACTOR * kb * n_loc * itemsize if p_row > 1 else 0.0
@@ -433,12 +555,21 @@ def from_plan(
         def a_bytes(t, i):
             return a_panel_bytes
 
+    if b_live is not None:
+
+        def b_bytes(t, j):
+            return BCAST_FACTOR * float(b_live[steps[t], j]) * itemsize
+    else:
+
+        def b_bytes(t, j):
+            return b_panel_bytes
+
     _emit_pipeline(
         b,
         n_steps=n_steps,
         lookahead=window,
         a_bytes=a_bytes,
-        b_bytes=lambda t, j: b_panel_bytes,
+        b_bytes=b_bytes,
         gemm_flops=gemm_flops,
         accum_flops=lambda i, j: float(m_loc * n_loc),
     )
@@ -572,7 +703,10 @@ def chain_graphs(graphs: list[TaskGraph]) -> TaskGraph:
         for task, deps in zip(g.tasks, g.deps):
             new_deps = [d + offset for d in deps]
             if s > 0:
-                if task.kind == "bcast_a":
+                if task.kind in ("bcast_a", "fetch_a"):
+                    # fetch_a: the receiver is devices[0]; its pulled A
+                    # panel reads the prior step's C exactly like a
+                    # broadcast root would.
                     if a_owner is None:
                         raise ValueError(
                             "chained graph lacks meta['a_owner'] for its "

@@ -112,9 +112,27 @@ def tune_plan(
                     graph.lookahead, sim)
 
     if plan.local_impl != "dense":
-        for la in lookahead_candidates(plan.p_row, plan.p_col,
-                                       len(plan.live_panels)):
-            consider(plan, "taskbased", la)
+        # Masked (dense-stored) plans may also flip the comm mode: the
+        # one-sided pull schedule wins when fill is low enough that
+        # per-gemm fetches beat panel broadcasts (repro.spgemm), and the
+        # fetch graph's owner-clock contention is exactly what the
+        # simulator prices.  Factored/bsmm plans keep their broadcast
+        # pipeline (their executors are broadcast-only).
+        modes = ["broadcast"]
+        if (
+            plan.local_impl == "masked"
+            and plan.a_ranks is None
+            and getattr(plan, "stationarity", "C") == "C"
+        ):
+            modes = ["broadcast", "pull"]
+        for mode in modes:
+            if mode == getattr(plan, "comm_mode", "broadcast"):
+                cand = plan
+            else:
+                cand = dataclasses.replace(plan, comm_mode=mode)
+            for la in lookahead_candidates(plan.p_row, plan.p_col,
+                                           len(plan.live_panels)):
+                consider(cand, "taskbased", la)
     else:
         for kb in _k_block_candidates(base_cfg, plan.k_steps):
             if kb == base_cfg.k_blocks:

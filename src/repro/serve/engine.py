@@ -74,13 +74,18 @@ def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
         ffs.append(cfg.moe.d_ff * cfg.moe.num_shared_experts)
     itemsize = jnp.dtype(cfg.dtype).itemsize
     tune = ctx.matmul_strategy == "auto"
+    # "auto" also lets the comm-volume model pick the stationarity: tall
+    # prefill activations keep C-stationary, skinny decode shapes can win
+    # with the weight-stationary variants (repro.spgemm chooser).
+    stationarity = "auto" if tune else "C"
     plans = []
     for m in (batch * prompt_len, batch):
         for f in ffs:
             for k_in, n_out in ((d, f), (f, d)):
                 plans.append(
                     ctx.plan_projection(
-                        m, k_in, n_out, itemsize=itemsize, tune=tune
+                        m, k_in, n_out, itemsize=itemsize, tune=tune,
+                        stationarity=stationarity,
                     )
                 )
     plans = [p for p in plans if p is not None]

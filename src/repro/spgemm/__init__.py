@@ -1,0 +1,45 @@
+"""repro.spgemm — output-structure-aware sparse x sparse planning.
+
+The planning layer for SpGEMM (sparse x sparse) products, built from
+three pieces the rest of the stack consumes:
+
+* ``structure`` — the symbolic output-structure pass: ``c = a (.) b``
+  boolean block products (rank-aware), the single inference both
+  ``core.plan.plan_matmul`` (dead-output gemm pruning) and
+  ``core.contract`` (inferred result masks) use;
+* ``stationarity`` — the DBCSR-style A-/B-/C-stationary chooser from
+  modeled comm volume of the structure triple (arXiv:1910.13555);
+* the one-sided **pull** comm mode (RDMA-SpGEMM, arXiv:2311.18141) lives
+  where its artifacts do: ``fetch`` tasks in ``sched.taskgraph``, the
+  owner-clock contention in ``sched.simulator``, and the gather-by-index
+  executor route in ``core.summa`` — all keyed off
+  ``MatmulPlan.comm_mode``.
+
+Import direction: ``repro.spgemm`` may import ``repro.core.sparsity``
+and ``repro.sched.taskgraph`` at module level; ``core.plan`` /
+``core.contract`` import this package lazily inside functions (they sit
+upstream in the import graph).
+"""
+from repro.spgemm.stationarity import (
+    STATIONARITIES,
+    choose_stationarity,
+    stationarity_comm_volumes,
+)
+from repro.spgemm.structure import (
+    as_block_mask,
+    as_rank_grid,
+    live_elems,
+    output_mask,
+    output_rank_bound,
+)
+
+__all__ = [
+    "STATIONARITIES",
+    "choose_stationarity",
+    "stationarity_comm_volumes",
+    "as_block_mask",
+    "as_rank_grid",
+    "live_elems",
+    "output_mask",
+    "output_rank_bound",
+]

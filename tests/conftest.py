@@ -179,6 +179,101 @@ def run_strategy(case: dict, mesh, strategy: str, *, row_axis="data",
     return np.asarray(out)
 
 
+# ---------------------------------------------------------------------------
+# SpGEMM differential oracle (structure on BOTH operands, repro.spgemm)
+# ---------------------------------------------------------------------------
+
+#: every sparse x sparse structure pairing the planner claims to absorb
+SPGEMM_FAMILIES = (
+    "banded_banded", "random_random", "blockdiag_blockdiag", "rank_random"
+)
+#: both comm schedules of the masked pipeline
+SPGEMM_COMM_MODES = ("broadcast", "pull")
+
+
+def spgemm_case(family: str, *, m=64, k=128, n=96, blocks=8, seed=0) -> dict:
+    """Build one sparse x sparse case: structure on both operands, the
+    inferred output mask from the symbolic pass
+    (``repro.spgemm.output_mask``), and the float64 NumPy reference of
+    the structure-zeroed product."""
+    from repro.core import (
+        banded_block_mask,
+        block_diag_block_mask,
+        decay_rank_map,
+        random_block_mask,
+        synthesize_rank_csr,
+    )
+    from repro.spgemm import output_mask
+
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    bm_sz, bk_sz, bn_sz = m // blocks, k // blocks, n // blocks
+    a_mask = a_ranks = None
+    if family == "banded_banded":
+        a_mask = banded_block_mask(blocks, blocks, 1)
+        b_mask = banded_block_mask(blocks, blocks, 1)
+    elif family == "random_random":
+        a_mask = random_block_mask(blocks, blocks, 0.3, seed=seed + 1)
+        b_mask = random_block_mask(blocks, blocks, 0.3, seed=seed + 2)
+    elif family == "blockdiag_blockdiag":
+        a_mask = block_diag_block_mask(blocks, blocks)
+        b_mask = block_diag_block_mask(blocks, blocks)
+    elif family == "rank_random":
+        rank_map = decay_rank_map(
+            blocks, blocks, bm_sz, bk_sz,
+            max_rank=max(2, min(bm_sz, bk_sz) // 4),
+            decay=0.7, threshold=2e-2,
+        )
+        a_ranks = synthesize_rank_csr(rank_map, seed=seed + 3)
+        a = a_ranks.to_dense()  # dense-stored twin of the factorization
+        b_mask = random_block_mask(blocks, blocks, 0.4, seed=seed + 2)
+    else:
+        raise ValueError(f"unknown spgemm family {family!r}")
+    c_mask = output_mask(
+        a_ranks.rank_map() if a_ranks is not None else a_mask, b_mask
+    )
+    a_z = a * _expand(a_mask, bm_sz, bk_sz) if a_mask is not None else a
+    b_z = b * _expand(b_mask, bk_sz, bn_sz)
+    ref = a_z.astype(np.float64) @ b_z.astype(np.float64)
+    return {
+        "family": family,
+        "a": a, "b": b,
+        "a_mask": a_mask, "b_mask": b_mask, "a_ranks": a_ranks,
+        "c_mask": c_mask,
+        "ref": ref,
+        "shape": (m, k, n),
+        "blocks": blocks,
+    }
+
+
+def run_spgemm(case: dict, mesh, comm_mode: str, *, row_axis="data",
+               col_axis="model", compiled: bool = True) -> np.ndarray:
+    """Execute one SpGEMM case through ``DistributedMatmul`` under the
+    given comm schedule, feeding back the inferred output mask."""
+    import jax.numpy as jnp
+
+    from repro.core import DistributedMatmul
+
+    mm = DistributedMatmul(
+        mesh, row_axis=row_axis, col_axis=col_axis, strategy="taskbased",
+        compiled=compiled,
+    )
+    if case["a_ranks"] is not None:
+        out = mm(
+            None, jnp.asarray(case["b"]), a_ranks=case["a_ranks"],
+            b_mask=case["b_mask"], c_mask=case["c_mask"],
+            comm_mode=comm_mode,
+        )
+    else:
+        out = mm(
+            jnp.asarray(case["a"]), jnp.asarray(case["b"]),
+            a_mask=case["a_mask"], b_mask=case["b_mask"],
+            c_mask=case["c_mask"], comm_mode=comm_mode,
+        )
+    return np.asarray(out)
+
+
 def check_case(case: dict, got: np.ndarray, label: str = "") -> None:
     np.testing.assert_allclose(
         got, case["ref"], atol=ORACLE_ATOL, rtol=ORACLE_RTOL,
@@ -321,6 +416,25 @@ for family in CONTRACT_SPECS:
     got = run_contract(case, mesh)
     check_contract_case(case, got, f"{{family}}/{p_row}x{p_col}")
 print("CONTRACT_SWEEP_OK")
+"""
+
+
+#: the SpGEMM subprocess sweep body — one grid per subprocess, full
+#: family x comm-mode cross inside (shared by test_spgemm.py)
+SPGEMM_SWEEP_CODE = r"""
+import numpy as np
+from conftest import (SPGEMM_COMM_MODES, SPGEMM_FAMILIES, check_case,
+                      run_spgemm, spgemm_case)
+from repro.launch.mesh import make_mesh
+
+grid = ({p_row}, {p_col})
+mesh = make_mesh(grid, ("data", "model"))
+for family in SPGEMM_FAMILIES:
+    case = spgemm_case(family, seed=13)
+    for mode in SPGEMM_COMM_MODES:
+        got = run_spgemm(case, mesh, mode)
+        check_case(case, got, f"{{family}}/{{mode}}/{p_row}x{p_col}")
+print("SPGEMM_SWEEP_OK")
 """
 
 

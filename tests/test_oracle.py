@@ -18,12 +18,16 @@ from conftest import (
     ORACLE_FAMILIES,
     ORACLE_STRATEGIES,
     ORACLE_SWEEP_CODE,
+    SPGEMM_COMM_MODES,
+    SPGEMM_FAMILIES,
     check_case,
     check_contract_case,
     contract_case,
     oracle_case,
     run_contract,
+    run_spgemm,
     run_strategy,
+    spgemm_case,
 )
 from repro.core import (
     DistributedMatmul,
@@ -88,6 +92,63 @@ def test_oracle_pallas_rank_kernel_1x1():
     # the single-launch local kernel route (stage 1 = one grouped gemm)
     got_local = np.asarray(kops.ranksparse_matmul(rcsr, b))
     np.testing.assert_allclose(got_local, want, atol=5e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sparse x sparse (SpGEMM): structure on BOTH operands, both comm modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", SPGEMM_COMM_MODES)
+@pytest.mark.parametrize("family", SPGEMM_FAMILIES)
+def test_spgemm_oracle_1x1(family, mode):
+    mesh = make_host_mesh(1, 1)
+    case = spgemm_case(family, seed=3)
+    got = run_spgemm(case, mesh, mode)
+    check_case(case, got, f"{family}/{mode}/1x1")
+
+
+@pytest.mark.parametrize("mode", SPGEMM_COMM_MODES)
+@pytest.mark.parametrize("family", SPGEMM_FAMILIES)
+def test_spgemm_compiled_matches_eager_1x1(family, mode):
+    """The digest-keyed executables must stay a pure dispatch
+    optimization under the new c_mask / pull routes: compiled and eager
+    outputs pinned bitwise, per comm mode."""
+    mesh = make_host_mesh(1, 1)
+    case = spgemm_case(family, seed=9)
+    got_compiled = run_spgemm(case, mesh, mode)
+    got_eager = run_spgemm(case, mesh, mode, compiled=False)
+    np.testing.assert_array_equal(
+        got_compiled, got_eager,
+        err_msg=f"spgemm compiled != eager: {family}/{mode}/1x1",
+    )
+    check_case(case, got_compiled, f"compiled:{family}/{mode}/1x1")
+
+
+#: the families the tuner may flip between comm modes — mask-only
+#: pipelines (rank payloads execute factored on broadcast but densify
+#: under pull, a different algorithm, so only tolerance equality holds
+#: there; ``tune_plan`` guards on ``a_ranks is None`` for the same
+#: reason)
+SPGEMM_MASK_FAMILIES = tuple(
+    f for f in SPGEMM_FAMILIES if not f.startswith("rank")
+)
+
+
+@pytest.mark.parametrize("family", SPGEMM_MASK_FAMILIES)
+def test_spgemm_pull_matches_broadcast_bitwise_1x1(family):
+    """Pull's gather-by-index executor accumulates the same panels in
+    the same order as the broadcast masked DAG — outputs are bitwise
+    equal, so flipping the comm mode (e.g. by the tuner) can never move
+    numerics."""
+    mesh = make_host_mesh(1, 1)
+    case = spgemm_case(family, seed=5)
+    got_bcast = run_spgemm(case, mesh, "broadcast")
+    got_pull = run_spgemm(case, mesh, "pull")
+    np.testing.assert_array_equal(
+        got_bcast, got_pull,
+        err_msg=f"spgemm pull != broadcast: {family}/1x1",
+    )
 
 
 # ---------------------------------------------------------------------------
