@@ -936,6 +936,211 @@ def bench_spgemm(json_path: str) -> None:
     print(f"# wrote {json_path}", flush=True)
 
 
+def bench_filter(json_path: str) -> None:
+    """Norm-filter threshold sweep + autotune persistence -> BENCH_filter.json.
+
+    DBCSR-style on-the-fly filtering on a decaying-norm workload (block
+    norms fall exponentially with band distance |i - k|, the iterative
+    C <- A.B regime of arXiv:1910.13555):
+
+    * threshold sweep — for each ``filter_eps`` the planned gemm-task
+      count must fall **monotonically**, the simulated makespan must
+      never exceed the unfiltered schedule's (filtered-never-slower; the
+      simulation is deterministic so the gate is noise-free), and the
+      measured Frobenius error vs the unfiltered float64 product must
+      stay <= the plan's documented additive bound ``filter_bound``;
+    * ``filter_eps=0`` — the plan digest must be **bitwise identical** to
+      a plan that never saw norms (the no-op contract the executable
+      cache relies on);
+    * filtered contract latency — steady-state wall of a filtered
+      ``contract()`` call, FLOP-normalized against the dense matmul wall
+      measured in the same process (the CI latency gate's filtered leg);
+    * kernel autotune — a save/load roundtrip of a freshly tuned bucket
+      (fingerprint-stable), with the recorded winner never slower than
+      the generic ``xla`` route on its own bucket.
+
+    The acceptance booleans ride in the JSON (CI asserts them).
+    """
+    import json
+    import os
+    import tempfile
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import DistributedMatmul
+    from repro.core.contract import BlockSparseTensor
+    from repro.core.plan import plan_matmul
+    from repro.core.sparsity import block_norms
+    from repro.kernels.autotune import KernelAutotuner, set_autotune_cache
+    from repro.launch.mesh import make_host_mesh
+    from repro.sched import abstract_summa_config, from_plan, simulate
+
+    set_autotune_cache(None)  # keep measured digests on the cold path
+    blk, n = 16, 1024
+    bs = n // blk
+    cfg = abstract_summa_config(blk, blk, strategy="taskbased")
+    mesh = make_host_mesh(1, 1)
+    mm = DistributedMatmul(mesh, strategy="taskbased", k_blocks=blk)
+    rng = np.random.default_rng(0)
+    decay = np.exp(
+        -0.8 * np.abs(np.arange(blk)[:, None] - np.arange(blk)[None, :])
+    )
+
+    def mat(_seed):
+        x = rng.standard_normal((n, n))
+        return (
+            x.reshape(blk, bs, blk, bs) * decay[:, None, :, None]
+        ).reshape(n, n)
+
+    a64, b64 = mat(0), mat(1)
+    a32 = jnp.asarray(a64, jnp.float32)
+    b32 = jnp.asarray(b64, jnp.float32)
+    an = block_norms(a64, blk, blk)
+    bn = block_norms(b64, blk, blk)
+    pmax = float(np.max(an[:, :, None] * bn[None, :, :]))
+    ref = a64 @ b64
+
+    def gemms(graph):
+        return sum(
+            1 for t in graph.tasks if t.kind == "gemm" and t.flops > 0
+        )
+
+    base_plan = plan_matmul(n, n, n, cfg)
+    base_sim = simulate(from_plan(base_plan))
+    # eps=0 digest bitwise: norms without a threshold are a strict no-op
+    eps0_plan = plan_matmul(
+        n, n, n, cfg, a_norms=an, b_norms=bn, filter_eps=0.0
+    )
+    digest_preserved = eps0_plan.digest() == base_plan.digest()
+
+    entries = []
+    prev_gemms = None
+    monotone = True
+    for frac in (0.0, 1e-4, 1e-3, 1e-2, 5e-2):
+        eps = frac * pmax
+        if eps > 0.0:
+            p = plan_matmul(
+                n, n, n, cfg, a_norms=an, b_norms=bn, filter_eps=eps
+            )
+        else:
+            p = base_plan
+        sim = simulate(from_plan(p))
+        ng = gemms(from_plan(p))
+        out, compile_s, wall_s = timed_split(
+            lambda e=eps: mm(
+                a32, b32, a_norms=an, b_norms=bn, filter_eps=e
+            )
+        )
+        err = float(
+            np.linalg.norm(np.asarray(out, np.float64) - ref)
+        )
+        bound = float(getattr(p, "filter_bound", 0.0))
+        # float32 execution noise rides on top of the analytic bound;
+        # normalize the slack to the result's own scale
+        slack = 1e-5 * float(np.linalg.norm(ref))
+        entry = {
+            "name": f"filter_f{frac:g}",
+            "filter_eps": eps,
+            "gemm_tasks": ng,
+            "gemm_tasks_unfiltered": gemms(from_plan(base_plan)),
+            "filter_bound": bound,
+            "error_frobenius": err,
+            "error_within_bound": bool(err <= bound + slack),
+            "makespan_s": sim.makespan_s,
+            "makespan_unfiltered_s": base_sim.makespan_s,
+            "never_slower_sim": bool(
+                sim.makespan_s <= base_sim.makespan_s * (1 + 1e-9)
+            ),
+            "wall_s": wall_s,
+            "compile_s": compile_s,
+        }
+        if prev_gemms is not None and ng > prev_gemms:
+            monotone = False
+        prev_gemms = ng
+        entries.append(entry)
+        _row(
+            entry["name"], wall_s * 1e6,
+            f"gemms={ng};bound={bound:.3g};err={err:.3g};"
+            f"sim={sim.makespan_s:.3e}",
+        )
+        assert entry["error_within_bound"], (entry["name"], err, bound)
+        assert entry["never_slower_sim"], (
+            entry["name"], sim.makespan_s, base_sim.makespan_s,
+        )
+    assert monotone, [e["gemm_tasks"] for e in entries]
+    assert digest_preserved, "filter_eps=0 changed the plan digest"
+
+    # filtered contract leg of the latency gate: steady-state wall of a
+    # filtered contract() vs the dense matmul wall, FLOP-normalized
+    xa = BlockSparseTensor.from_dense(a32, block_shape=(bs, bs))
+    xb = BlockSparseTensor.from_dense(b32, block_shape=(bs, bs))
+    eps_mid = 1e-3 * pmax
+    _, dense_compile, dense_wall = timed_split(lambda: mm(a32, b32))
+    cout, c_compile, c_wall = timed_split(
+        lambda: mm.contract("ik,kj->ij", xa, xb, filter_eps=eps_mid)
+    )
+    fp = mm.plan(n, n, n, a_norms=an, b_norms=bn, filter_eps=eps_mid)
+    fsummary = fp.summary()
+    contract_entry = {
+        "name": "contract_filtered",
+        "filter_eps": eps_mid,
+        "wall_s": c_wall,
+        "compile_s": c_compile,
+        "dense_wall_s": dense_wall,
+        "flops_sparse": fsummary["flops_sparse"],
+        "flops_dense": fsummary["flops_dense"],
+    }
+    entries.append(contract_entry)
+    _row(
+        "filter_contract", c_wall * 1e6,
+        f"dense_wall={dense_wall * 1e6:.1f}us;"
+        f"flops_ratio={fsummary['flops_sparse'] / fsummary['flops_dense']:.3f}",
+    )
+
+    # kernel autotune: tuned winner never loses to the generic route on
+    # its own bucket, and the JSON persistence roundtrip is stable
+    tuner = KernelAutotuner()
+    entry_at = tuner.tune(bs, bs, bs, repeats=2, routes=("xla", "pallas"))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "autotune.json")
+        tuner.save(path)
+        restored = KernelAutotuner()
+        n_loaded = restored.load(path)
+    autotune = {
+        "winner": entry_at["winner"],
+        "times_s": entry_at["times_s"],
+        "winner_not_slower_than_generic": bool(
+            entry_at["times_s"][entry_at["winner"]]
+            <= entry_at["times_s"]["xla"]
+        ),
+        "roundtrip_entries": n_loaded,
+        "roundtrip_fingerprint_stable": bool(
+            restored.fingerprint() == tuner.fingerprint()
+        ),
+    }
+    assert autotune["winner_not_slower_than_generic"], autotune
+    assert autotune["roundtrip_fingerprint_stable"], autotune
+    _row(
+        "filter_autotune", 0.0,
+        f"winner={autotune['winner']};entries={n_loaded}",
+    )
+
+    with open(json_path, "w") as f:
+        json.dump(
+            {
+                "bench": "filter",
+                "entries": entries,
+                "autotune": autotune,
+                "digest_preserved_eps0": digest_preserved,
+                "monotone_gemm_reduction": monotone,
+                "cache_stats": mm.cache_stats(),
+            },
+            f, indent=2,
+        )
+    print(f"# wrote {json_path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -944,10 +1149,11 @@ def main() -> None:
     ap.add_argument("--ranksparse-json", default="BENCH_ranksparse.json")
     ap.add_argument("--contract-json", default="BENCH_contract.json")
     ap.add_argument("--spgemm-json", default="BENCH_spgemm.json")
+    ap.add_argument("--filter-json", default="BENCH_filter.json")
     ap.add_argument(
         "--only",
         help="comma-separated list of JSON-writing sections to run "
-        "(ranksparse, sched, summa, contract, spgemm), e.g. "
+        "(ranksparse, sched, summa, contract, spgemm, filter), e.g. "
         "--only summa,contract (CI artifact jobs)",
     )
     args = ap.parse_args()
@@ -957,6 +1163,7 @@ def main() -> None:
         "ranksparse": lambda: bench_ranksparse(args.ranksparse_json),
         "contract": lambda: bench_contract(args.contract_json),
         "spgemm": lambda: bench_spgemm(args.spgemm_json),
+        "filter": lambda: bench_filter(args.filter_json),
     }
     if args.only is not None:
         names = [s.strip() for s in args.only.split(",") if s.strip()]
@@ -980,6 +1187,7 @@ def main() -> None:
     bench_ranksparse(args.ranksparse_json)
     bench_contract(args.contract_json)
     bench_spgemm(args.spgemm_json)
+    bench_filter(args.filter_json)
     bench_blocksparse()
     bench_strategies()
     bench_weak_scaling(args.quick)

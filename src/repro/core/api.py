@@ -133,6 +133,9 @@ class DistributedMatmul:
         lookahead: int | None = None,
         comm_mode: str = "broadcast",
         stationarity: str = "C",
+        a_norms: np.ndarray | None = None,
+        b_norms: np.ndarray | None = None,
+        filter_eps: float = 0.0,
     ) -> MatmulPlan:
         """The (cached) execution plan for a (M, K) x (K, N) product.
 
@@ -150,8 +153,14 @@ class DistributedMatmul:
         comm mode instead of the static config.  ``lookahead`` pins the
         per-plan multiple-issue window explicitly (the chain scheduler
         uses this to execute jointly tuned windows); it overrides a tuned
-        window.
+        window.  ``a_norms`` / ``b_norms`` (per-block Frobenius norms)
+        with ``filter_eps > 0`` screen small products DBCSR-style; the
+        cache key digests the norm grids only when a filter is active, so
+        ``filter_eps=0`` calls key (and plan) identically to norm-free
+        ones.
         """
+        from repro.core.sparsity import norms_key
+
         rank_payload = isinstance(a_ranks, RankCSR)
         key = (
             m, k, n, mask_key(a_mask), mask_key(b_mask), rank_key(a_ranks),
@@ -159,6 +168,10 @@ class DistributedMatmul:
             lookahead, rank_key(b_ranks), mask_key(c_mask), comm_mode,
             stationarity,
         )
+        if filter_eps > 0.0:
+            key = key + (
+                float(filter_eps), norms_key(a_norms), norms_key(b_norms),
+            )
         plan = self._plan_cache.get(key)
         if plan is None:
             self._cache_stats["plan_misses"] += 1
@@ -174,6 +187,7 @@ class DistributedMatmul:
                 b_ranks=b_rank_map, c_mask=c_mask,
                 rank_payload=rank_payload, comm_mode=comm_mode,
                 stationarity=stationarity, itemsize=itemsize,
+                a_norms=a_norms, b_norms=b_norms, filter_eps=filter_eps,
             )
             if tune:
                 from repro.sched.tuner import tune_plan  # deferred: no cycle
@@ -235,6 +249,9 @@ class DistributedMatmul:
         lookahead: int | None = None,
         comm_mode: str = "broadcast",
         stationarity: str = "C",
+        a_norms: np.ndarray | None = None,
+        b_norms: np.ndarray | None = None,
+        filter_eps: float = 0.0,
     ) -> jax.Array:
         """C = A @ B.  ``a_ranks`` plans A block-rank-sparse:
 
@@ -251,7 +268,12 @@ class DistributedMatmul:
         the output block grid (dead C blocks are pruned from the schedule
         and zeroed in the result), ``comm_mode="pull"`` plans one-sided
         panel fetches, ``stationarity="auto"`` lets the comm-volume
-        chooser pick the stationary operand.
+        chooser pick the stationary operand.  ``a_norms`` / ``b_norms``
+        (per-block Frobenius norm grids, e.g. ``sparsity.block_norms``)
+        with ``filter_eps > 0`` drop every (i, k, j) product whose
+        ``||A_ik||.||B_kj||`` bound falls below the threshold; the
+        result then differs from the exact product by at most the plan's
+        recorded ``filter_bound`` in Frobenius norm.
         """
         if a_mask is not None and a_ranks is not None:
             # same rule the planner enforces for the BlockRankMap path —
@@ -271,6 +293,7 @@ class DistributedMatmul:
                 a_ranks, b, b_mask=b_mask, b_ranks=b_ranks, c_mask=c_mask,
                 strategy=strategy, tune=tune, lookahead=lookahead,
                 comm_mode=comm_mode, stationarity=stationarity,
+                a_norms=a_norms, b_norms=b_norms, filter_eps=filter_eps,
             )
         if a is None:
             raise ValueError("a=None requires a_ranks to be a RankCSR")
@@ -283,6 +306,7 @@ class DistributedMatmul:
             b_ranks=b_ranks, c_mask=c_mask, strategy=strategy,
             itemsize=a.dtype.itemsize, tune=tune, lookahead=lookahead,
             comm_mode=comm_mode, stationarity=stationarity,
+            a_norms=a_norms, b_norms=b_norms, filter_eps=filter_eps,
         )
         (mp, kp), (_, np_) = plan.padded_shapes
         a_p = _pad_to_shape(a, (mp, kp))
@@ -325,6 +349,9 @@ class DistributedMatmul:
         lookahead: int | None = None,
         comm_mode: str = "broadcast",
         stationarity: str = "C",
+        a_norms: np.ndarray | None = None,
+        b_norms: np.ndarray | None = None,
+        filter_eps: float = 0.0,
     ) -> jax.Array:
         m, k = a_ranks.shape
         k2, n = b.shape
@@ -332,11 +359,18 @@ class DistributedMatmul:
             raise ValueError(
                 f"contraction mismatch {a_ranks.shape} @ {b.shape}"
             )
+        if filter_eps > 0.0 and a_norms is None:
+            # the factor payload carries its own norms (||A_ik||_F =
+            # ||U_ik V_ik||_F computed exactly from the factors)
+            from repro.core.sparsity import rank_csr_norms
+
+            a_norms = rank_csr_norms(a_ranks)
         plan = self.plan(
             m, k, n, b_mask=b_mask, b_ranks=b_ranks, c_mask=c_mask,
             a_ranks=a_ranks, strategy=strategy,
             itemsize=b.dtype.itemsize, tune=tune, lookahead=lookahead,
             comm_mode=comm_mode, stationarity=stationarity,
+            a_norms=a_norms, b_norms=b_norms, filter_eps=filter_eps,
         )
         (mp, kp), (_, np_) = plan.padded_shapes
         b_p = _pad_to_shape(b, (kp, np_))
@@ -373,9 +407,21 @@ class NonuniformMatmul:
     row_tiling: bk.Tiling
     inner_tiling: bk.Tiling
     col_tiling: bk.Tiling
-    tile: int = 256
+    tile: int | str = 256
 
     def __post_init__(self):
+        if self.tile == "auto":
+            # physical tile from the kernel autotune cache: pick the
+            # measured-fastest square bucket (normalized per flop) that
+            # the logical block sizes can fill; static 256 on a cold cache.
+            from repro.kernels.autotune import preferred_tile
+
+            max_block = max(
+                max(self.row_tiling.sizes),
+                max(self.inner_tiling.sizes),
+                max(self.col_tiling.sizes),
+            )
+            self.tile = preferred_tile(max_block) or 256
         self.row_b = bk.bucketize(self.row_tiling, self.tile)
         self.inner_b = bk.bucketize(self.inner_tiling, self.tile)
         self.col_b = bk.bucketize(self.col_tiling, self.tile)

@@ -173,7 +173,12 @@ class BlockSparseTensor:
       it drives cost/pruning only (``rank_payload=False`` planning);
     * ``rank_csr`` — optional factorized payload (2-D tensors only):
       the operand *is* the factorization, executed through
-      ``execute_rank_plan``.
+      ``execute_rank_plan``;
+    * ``norms`` — optional float array over the block grid carrying
+      per-block Frobenius norms (:meth:`block_norms` computes them from
+      the data when absent).  Contraction results propagate *bounds*
+      here (``||C_ij|| <= sum_k ||A_ik||.||B_kj||``), which is what lets
+      ``filter_eps`` chains get progressively sparser.
     """
 
     data: object | None
@@ -181,6 +186,7 @@ class BlockSparseTensor:
     mask: np.ndarray | None = None
     ranks: np.ndarray | None = None
     rank_csr: RankCSR | None = None
+    norms: np.ndarray | None = None
 
     def __post_init__(self):
         self.tilings = tuple(_as_tiling(t) for t in self.tilings)
@@ -218,7 +224,8 @@ class BlockSparseTensor:
                 )
         if self.mask is not None and self.ranks is not None:
             raise ValueError("pass either mask or ranks, not both")
-        for name in ("mask", "ranks"):
+        dtypes = {"mask": bool, "ranks": np.int32, "norms": np.float64}
+        for name, dt in dtypes.items():
             arr = getattr(self, name)
             if arr is None:
                 continue
@@ -228,10 +235,7 @@ class BlockSparseTensor:
                     f"{name} shape {arr.shape} != block grid "
                     f"{self.block_grid}"
                 )
-            setattr(
-                self, name,
-                arr.astype(bool if name == "mask" else np.int32),
-            )
+            setattr(self, name, arr.astype(dt))
 
     # -- geometry ------------------------------------------------------------
 
@@ -269,6 +273,34 @@ class BlockSparseTensor:
             area = np.multiply.outer(area, np.asarray(t.sizes, np.float64))
         total = float(area.sum())
         return float((area * mask).sum() / total) if total else 0.0
+
+    def block_norms(self) -> np.ndarray:
+        """Per-block Frobenius norms over the block grid.
+
+        Precomputed ``norms`` (e.g. the propagated bounds a filtered
+        contraction attaches) pass through; otherwise norms are computed
+        from the stored data — exactly for dense storage, from the
+        factors for ``rank_csr`` payloads (``||U V||_F`` computed without
+        densifying).  Dead blocks (mask / rank screened) report 0, so
+        norms agree with the effective structure.
+        """
+        if self.norms is not None:
+            return self.norms
+        if self.rank_csr is not None:
+            from repro.core.sparsity import rank_csr_norms
+
+            return rank_csr_norms(self.rank_csr)
+        if self.data is None:
+            raise ValueError("block_norms needs data or precomputed norms")
+        sq = np.asarray(self.data, dtype=np.float64) ** 2
+        for axis, t in enumerate(self.tilings):
+            sq = np.add.reduceat(
+                sq, np.asarray(t.offsets, dtype=np.int64), axis=axis
+            )
+        out = np.sqrt(sq)
+        if self.mask is not None or self.ranks is not None:
+            out = np.where(self.block_mask, out, 0.0)
+        return out
 
     def to_dense(self) -> np.ndarray:
         """Dense numpy storage with masked blocks zeroed (the oracle view)."""
@@ -742,6 +774,107 @@ def _nonuniform_rank_map(geom: _StepGeometry, x: BlockSparseTensor):
     return None
 
 
+def _matricized_norms(
+    t: BlockSparseTensor,
+    modes: tuple[str, ...],
+    rows: tuple[str, ...],
+    cols: tuple[str, ...],
+    og: _OperandGeom,
+) -> np.ndarray:
+    """Per-block Frobenius norms of one operand on its *matricized* block
+    grid.
+
+    Norms are data-dependent, so they are computed here at call time and
+    never stored on the structurally-cached :class:`_StepGeometry`.
+    Precomputed ``norms`` grids (chain intermediates, ``rank_csr``
+    payloads) matricize by the exact block reshape; dense-stored data is
+    matricized host-side and reduced block by block — this also covers
+    plain operands whose blocking was adopted from the partner (their own
+    one-block grid would not match the merged tilings).
+    """
+    want = (og.row_tiling.num_blocks, og.col_tiling.num_blocks)
+    if t.norms is not None or t.rank_csr is not None or t.data is None:
+        n2 = matricize_mask(t.block_norms(), modes, rows, cols)
+        n2 = np.asarray(n2, dtype=np.float64)
+        if n2.shape != want:
+            raise ValueError(
+                f"norm grid {n2.shape} mismatches the matricized block "
+                f"grid {want}"
+            )
+        return n2
+    x2 = np.transpose(np.asarray(t.data), og.axes).reshape(
+        og.row_tiling.extent, og.col_tiling.extent
+    )
+    if og.row_perm is not None:
+        x2 = x2[og.row_perm]
+    if og.col_perm is not None:
+        x2 = x2[:, og.col_perm]
+    sq = np.asarray(x2, dtype=np.float64) ** 2
+    sq = np.add.reduceat(
+        sq, np.asarray(og.row_tiling.offsets, np.int64), axis=0
+    )
+    sq = np.add.reduceat(
+        sq, np.asarray(og.col_tiling.offsets, np.int64), axis=1
+    )
+    n2 = np.sqrt(sq)
+    if t.mask is not None or t.ranks is not None:
+        m2 = matricize_mask(t.block_mask, modes, rows, cols)
+        if m2.shape == n2.shape:
+            n2 = np.where(m2, n2, 0.0)
+    return n2
+
+
+def _step_norms(
+    geom: _StepGeometry, x: BlockSparseTensor, y: BlockSparseTensor
+) -> tuple[np.ndarray, np.ndarray]:
+    """Matricized (A, B) norm grids for a ``filter_eps`` step."""
+    spec = geom.spec
+    an2 = _matricized_norms(
+        x, spec.x_modes, spec.free_x, spec.contracted, geom.x_geom
+    )
+    bn2 = _matricized_norms(
+        y, spec.y_modes, spec.contracted, spec.free_y, geom.y_geom
+    )
+    return an2, bn2
+
+
+def _filtered_out_structure(
+    geom: _StepGeometry,
+    a_norms2: np.ndarray,
+    b_norms2: np.ndarray,
+    filter_eps: float,
+) -> tuple[np.ndarray, np.ndarray]:
+    """The *filtered* output structure of a ``filter_eps`` step.
+
+    ``(out_mask, out_norms)`` on the output block grid: the mask keeps
+    only C blocks with at least one surviving (i, k, j) addend —
+    refining the symbolic ``geom.out_mask`` — and the norms are the
+    propagated ``sum_k ||A_ik||.||B_kj||`` bounds over surviving
+    addends.  This is what a chained step must see as its predecessor
+    structure (the chain regression test pins it): the symbolic product
+    alone would resurrect screened blocks.
+    """
+    from repro.spgemm import filter_keep, output_norms
+
+    keep, _bound = filter_keep(a_norms2, b_norms2, filter_eps)
+    cn2 = output_norms(a_norms2, b_norms2, keep)
+    ckeep2 = keep.any(axis=1)
+    spec = geom.spec
+    grids = {
+        m: t.num_blocks for m, t in zip(spec.out_modes, geom.out_tilings)
+    }
+    out_norms = unmatricize_mask(
+        cn2, spec.free_x, spec.free_y, grids, spec.out_modes
+    )
+    keep_mask = unmatricize_mask(
+        ckeep2, spec.free_x, spec.free_y, grids, spec.out_modes
+    ).astype(bool)
+    out_mask = (
+        keep_mask if geom.out_mask is None else (geom.out_mask & keep_mask)
+    )
+    return out_mask, np.where(out_mask, out_norms, 0.0)
+
+
 def _step_c_mask(geom: _StepGeometry) -> np.ndarray | None:
     """The inferred output mask worth forwarding to the planner.
 
@@ -754,12 +887,26 @@ def _step_c_mask(geom: _StepGeometry) -> np.ndarray | None:
     return cm
 
 
-def _plan_step(mm, geom: _StepGeometry, x: BlockSparseTensor, itemsize=4):
+def _plan_step(
+    mm,
+    geom: _StepGeometry,
+    x: BlockSparseTensor,
+    itemsize=4,
+    *,
+    a_norms2: np.ndarray | None = None,
+    b_norms2: np.ndarray | None = None,
+    filter_eps: float = 0.0,
+):
     """The MatmulPlan this step will execute (for chain scheduling)."""
     m = geom.x_geom.row_tiling.extent
     k = geom.x_geom.col_tiling.extent
     n = geom.y_geom.col_tiling.extent
     if not geom.uniform:
+        if filter_eps > 0.0:
+            raise NotImplementedError(
+                "filter_eps needs uniform merged tilings (the bucketized "
+                "adaptation re-blocks norms ambiguously)"
+            )
         nmm = _nonuniform_front_end(mm, geom)
         return nmm.plan(
             a_ranks=_nonuniform_rank_map(geom, x), itemsize=itemsize
@@ -768,6 +915,7 @@ def _plan_step(mm, geom: _StepGeometry, x: BlockSparseTensor, itemsize=4):
         return mm.plan(
             m, k, n, b_mask=geom.b_mask2, a_ranks=x.rank_csr,
             c_mask=_step_c_mask(geom), itemsize=itemsize,
+            a_norms=a_norms2, b_norms=b_norms2, filter_eps=filter_eps,
         )
     a_ranks = geom.a_ranks2 if isinstance(
         geom.a_ranks2, BlockRankMap
@@ -775,6 +923,7 @@ def _plan_step(mm, geom: _StepGeometry, x: BlockSparseTensor, itemsize=4):
     return mm.plan(
         m, k, n, a_mask=geom.a_mask2, b_mask=geom.b_mask2,
         a_ranks=a_ranks, c_mask=_step_c_mask(geom), itemsize=itemsize,
+        a_norms=a_norms2, b_norms=b_norms2, filter_eps=filter_eps,
     )
 
 
@@ -786,12 +935,19 @@ def _execute_step(
     *,
     lookahead: int | None = None,
     tune: bool = False,
+    a_norms2: np.ndarray | None = None,
+    b_norms2: np.ndarray | None = None,
+    filter_eps: float = 0.0,
 ):
     """Matricize, multiply through the planner, un-matricize."""
     import jax.numpy as jnp
 
     b2 = geom.y_geom.matricize(y.data)
     if not geom.uniform:
+        if filter_eps > 0.0:
+            raise NotImplementedError(
+                "filter_eps needs uniform merged tilings"
+            )
         # Bucketized path: masks are applied elementwise (exact — pad and
         # dead blocks are zero) and x's structure rides as the logical
         # rank map so screened blocks still prune the physical plan.
@@ -824,6 +980,7 @@ def _execute_step(
         c2 = mm(
             None, b2, a_ranks=x.rank_csr, b_mask=geom.b_mask2,
             c_mask=_step_c_mask(geom), lookahead=lookahead, tune=tune,
+            a_norms=a_norms2, b_norms=b_norms2, filter_eps=filter_eps,
         )
     else:
         a2 = geom.x_geom.matricize(x.data)
@@ -835,6 +992,7 @@ def _execute_step(
             a_mask=geom.a_mask2 if a_ranks is None else None,
             b_mask=geom.b_mask2, a_ranks=a_ranks,
             c_mask=_step_c_mask(geom), lookahead=lookahead, tune=tune,
+            a_norms=a_norms2, b_norms=b_norms2, filter_eps=filter_eps,
         )
     fx_ext, fy_ext = _free_extents(geom, x, y)
     return _unmatricize_step(c2, geom, fx_ext, fy_ext)
@@ -898,6 +1056,7 @@ def _with_data(t: BlockSparseTensor, data) -> BlockSparseTensor:
     s.mask = t.mask
     s.ranks = t.ranks
     s.rank_csr = t.rank_csr
+    s.norms = t.norms
     return s
 
 
@@ -912,6 +1071,9 @@ def _any_traced(*datas) -> bool:
 def _cached_step(mm, key: tuple, build):
     """Get-or-build a compiled contraction program in ``_contract_cache``
     (hits/misses surface through ``DistributedMatmul.cache_stats``)."""
+    from repro.core.summa import _autotune_key_suffix
+
+    key = key + _autotune_key_suffix()
     cache = mm._contract_cache
     stats = getattr(mm, "_cache_stats", None)
     fn = cache.get(key)
@@ -940,6 +1102,24 @@ def _count_retrace(mm) -> None:
         stats["step_retraces"] += 1
 
 
+def _filter_key(
+    filter_eps: float,
+    a_norms2: np.ndarray | None,
+    b_norms2: np.ndarray | None,
+) -> tuple:
+    """Cache-key suffix for an active norm filter.  Empty at
+    ``filter_eps=0`` so unfiltered keys (and their compiled programs)
+    stay bitwise identical to pre-filter ones."""
+    if filter_eps <= 0.0:
+        return ()
+    from repro.core.sparsity import norms_key
+
+    return (
+        ("filter", float(filter_eps), norms_key(a_norms2),
+         norms_key(b_norms2)),
+    )
+
+
 def _execute_step_compiled(
     mm,
     geom: _StepGeometry,
@@ -948,6 +1128,9 @@ def _execute_step_compiled(
     *,
     lookahead: int | None = None,
     tune: bool = False,
+    a_norms2: np.ndarray | None = None,
+    b_norms2: np.ndarray | None = None,
+    filter_eps: float = 0.0,
 ):
     """One cached jitted program for the whole step.
 
@@ -972,14 +1155,20 @@ def _execute_step_compiled(
         or not getattr(mm, "compiled", True)
         or _any_traced(x.data, y.data)
     ):
-        return _execute_step(mm, geom, x, y, lookahead=lookahead, tune=tune)
+        return _execute_step(
+            mm, geom, x, y, lookahead=lookahead, tune=tune,
+            a_norms2=a_norms2, b_norms2=b_norms2, filter_eps=filter_eps,
+        )
     fx_ext, fy_ext = _free_extents(geom, x, y)
+    fkey = _filter_key(filter_eps, a_norms2, b_norms2)
 
     if x.rank_csr is not None:
         if not geom.x_geom.identity or not geom.uniform:
             # eager path raises the informative NotImplementedError
             return _execute_step(
-                mm, geom, x, y, lookahead=lookahead, tune=tune
+                mm, geom, x, y, lookahead=lookahead, tune=tune,
+                a_norms2=a_norms2, b_norms2=b_norms2,
+                filter_eps=filter_eps,
             )
         m = geom.x_geom.row_tiling.extent
         k = geom.x_geom.col_tiling.extent
@@ -989,6 +1178,7 @@ def _execute_step_compiled(
             c_mask=_step_c_mask(geom),
             itemsize=np.dtype(y.data.dtype).itemsize, tune=tune,
             lookahead=lookahead,
+            a_norms=a_norms2, b_norms=b_norms2, filter_eps=filter_eps,
         )
         (mp, kp), (_, np_) = plan.padded_shapes
         if plan.local_impl == "ranksparse":
@@ -1006,7 +1196,7 @@ def _execute_step_compiled(
             key = (
                 "exec_rank", geom.cache_key, str(y.data.dtype),
                 lookahead, tune,
-            )
+            ) + fkey
             return _cached_step(mm, key, build)(
                 jnp.asarray(u_all), jnp.asarray(v_all), y.data
             )
@@ -1026,7 +1216,7 @@ def _execute_step_compiled(
         key = (
             "exec_rankdense", geom.cache_key, str(y.data.dtype),
             lookahead, tune,
-        )
+        ) + fkey
         return _cached_step(mm, key, build)(
             jnp.asarray(x.rank_csr.to_dense()), y.data
         )
@@ -1040,6 +1230,8 @@ def _execute_step_compiled(
             return _execute_step(
                 mm, geom, _with_data(x_sym, xd), _with_data(y_sym, yd),
                 lookahead=lookahead, tune=tune,
+                a_norms2=a_norms2, b_norms2=b_norms2,
+                filter_eps=filter_eps,
             )
 
         return jax.jit(traced)
@@ -1047,7 +1239,7 @@ def _execute_step_compiled(
     key = (
         "exec_step", geom.cache_key, str(x.data.dtype), str(y.data.dtype),
         lookahead, tune,
-    )
+    ) + fkey
     return _cached_step(mm, key, build)(x.data, y.data)
 
 
@@ -1065,6 +1257,7 @@ def contract(
     tile: int = 64,
     lookahead: int | None = None,
     tune: bool = False,
+    filter_eps: float = 0.0,
 ) -> BlockSparseTensor:
     """Binary block-sparse tensor contraction through the MatmulPlan engine.
 
@@ -1075,20 +1268,49 @@ def contract(
     element (every slice shares one cached plan).  Returns a
     :class:`BlockSparseTensor` whose mask is *inferred* from the operand
     structure (exactly the reachable C blocks), ready to chain.
+
+    ``filter_eps > 0`` screens (i, k, j) block products whose
+    ``||X_ik||.||Y_kj||`` norm bound falls below the threshold (DBCSR's
+    on-the-fly filtering): the result differs from the exact contraction
+    by at most the dropped-product sum in Frobenius norm, and it carries
+    the *filtered* output mask plus propagated per-block norm bounds —
+    chained filtered contractions get progressively sparser.
     """
     import jax
     import jax.numpy as jnp
 
     x, y = _wrap(x), _wrap(y)
     pspec = parse_contraction(spec)
+    if filter_eps > 0.0 and pspec.batch:
+        raise NotImplementedError(
+            "filter_eps with batch modes is not supported (filter the "
+            "per-slice contractions instead)"
+        )
+    if filter_eps > 0.0 and _any_traced(x.data, y.data):
+        raise ValueError(
+            "filter_eps needs concrete operands: per-block norms are "
+            "host planning inputs and cannot be traced"
+        )
     if not pspec.batch:
         geom = _geometry_cached(mm, spec, x, y, tile)
+        a_norms2 = b_norms2 = None
+        if filter_eps > 0.0:
+            a_norms2, b_norms2 = _step_norms(geom, x, y)
         data = _execute_step_compiled(
-            mm, geom, x, y, lookahead=lookahead, tune=tune
+            mm, geom, x, y, lookahead=lookahead, tune=tune,
+            a_norms2=a_norms2, b_norms2=b_norms2, filter_eps=filter_eps,
         )
         if not pspec.out_modes:  # full contraction to a scalar
             return BlockSparseTensor(
                 data=data.reshape(()), tilings=(), mask=None
+            )
+        if filter_eps > 0.0:
+            out_mask, out_norms = _filtered_out_structure(
+                geom, a_norms2, b_norms2, filter_eps
+            )
+            return BlockSparseTensor(
+                data=data, tilings=geom.out_tilings, mask=out_mask,
+                norms=out_norms,
             )
         return BlockSparseTensor(
             data=data, tilings=geom.out_tilings, mask=geom.out_mask
@@ -1279,6 +1501,7 @@ def contract_chain(
     tune: bool = False,
     machine=None,
     trace: bool = False,
+    filter_eps: float = 0.0,
 ):
     """Execute consecutive contractions under one *jointly scheduled* plan.
 
@@ -1317,16 +1540,46 @@ def contract_chain(
             raise NotImplementedError(
                 "joint chain scheduling supports non-batch specs only"
             )
+    if filter_eps > 0.0 and _any_traced(
+        norm[0][1].data, *[y.data for _s, _x, y in norm]
+    ):
+        raise ValueError(
+            "filter_eps needs concrete operands: per-block norms are "
+            "host planning inputs and cannot be traced"
+        )
 
     # -- phase 1: symbolic pass (geometry + plans, no data) -----------------
+    # Under an active filter every step sees the *filtered* predecessor
+    # structure: the symbolic intermediate carries the screened mask and
+    # the propagated norm bounds, so step i+1's geometry / plan / norms
+    # derive from what step i actually computed — not from the symbolic
+    # product, which would resurrect screened blocks.
     geoms = []
     plans = []
+    syms = []  # per-step symbolic outputs (filtered structure when active)
+    norms_steps = []  # per-step matricized (A, B) norm grids (None pairs)
     x_cur = norm[0][1]
     for spec, _x, y in norm:
         geom = _geometry_cached(mm, spec.spec, x_cur, y, tile)
         geoms.append(geom)
-        plans.append(_plan_step(mm, geom, x_cur))
-        x_cur = _symbolic_out(geom)  # structure only; data comes in phase 3
+        if filter_eps > 0.0:
+            an2, bn2 = _step_norms(geom, x_cur, y)
+            norms_steps.append((an2, bn2))
+            plans.append(_plan_step(
+                mm, geom, x_cur,
+                a_norms2=an2, b_norms2=bn2, filter_eps=filter_eps,
+            ))
+            out_mask, out_norms = _filtered_out_structure(
+                geom, an2, bn2, filter_eps
+            )
+            x_cur = _symbolic_out(geom)
+            x_cur.mask = out_mask
+            x_cur.norms = out_norms
+        else:
+            norms_steps.append((None, None))
+            plans.append(_plan_step(mm, geom, x_cur))
+            x_cur = _symbolic_out(geom)  # structure only; data in phase 3
+        syms.append(x_cur)
 
     # -- phase 2: union graph, simulation, joint window tuning ---------------
     builders = [
@@ -1377,12 +1630,15 @@ def contract_chain(
             def traced(x0d, *yds):
                 _count_retrace(mm)
                 x_cur = _with_data(x0_sym, x0d)
-                for geom, la, y_sym, yd in zip(geoms, las, y_syms, yds):
+                for geom, la, y_sym, yd, sym_out, (an2, bn2) in zip(
+                    geoms, las, y_syms, yds, syms, norms_steps
+                ):
                     data = _execute_step(
                         mm, geom, x_cur, _with_data(y_sym, yd),
                         lookahead=la,
+                        a_norms2=an2, b_norms2=bn2, filter_eps=filter_eps,
                     )
-                    x_cur = _with_data(_symbolic_out(geom), data)
+                    x_cur = _with_data(sym_out, data)
                 return x_cur.data
 
             return jax.jit(traced)
@@ -1390,20 +1646,29 @@ def contract_chain(
         key = (
             "exec_chain", tuple(g.cache_key for g in geoms), las,
             str(x0.data.dtype), tuple(str(y.data.dtype) for y in ys),
+        ) + tuple(
+            k for an2, bn2 in norms_steps
+            for k in _filter_key(filter_eps, an2, bn2)
         )
         data = _cached_step(mm, key, build)(
             x0.data, *[y.data for y in ys]
         )
         x_cur = BlockSparseTensor(
             data=data, tilings=geoms[-1].out_tilings,
-            mask=geoms[-1].out_mask,
+            mask=syms[-1].mask, norms=syms[-1].norms,
         )
     else:
         x_cur = x0
-        for y, geom, la in zip(ys, geoms, las):
-            data = _execute_step_compiled(mm, geom, x_cur, y, lookahead=la)
+        for y, geom, la, sym_out, (an2, bn2) in zip(
+            ys, geoms, las, syms, norms_steps
+        ):
+            data = _execute_step_compiled(
+                mm, geom, x_cur, y, lookahead=la,
+                a_norms2=an2, b_norms2=bn2, filter_eps=filter_eps,
+            )
             x_cur = BlockSparseTensor(
-                data=data, tilings=geom.out_tilings, mask=geom.out_mask
+                data=data, tilings=geom.out_tilings,
+                mask=sym_out.mask, norms=sym_out.norms,
             )
 
     report = {
@@ -1419,6 +1684,11 @@ def contract_chain(
         "plans": [p.summary() for p in plans],
         "tuned": tuned_record,
     }
+    if filter_eps > 0.0:
+        report["filter_eps"] = float(filter_eps)
+        report["filter_bounds"] = [
+            float(getattr(p, "filter_bound", 0.0)) for p in plans
+        ]
     if trace:
         report["sim"] = joint
     return x_cur, report
@@ -1433,4 +1703,5 @@ def _symbolic_out(geom: _StepGeometry) -> BlockSparseTensor:
     t.mask = geom.out_mask
     t.ranks = None
     t.rank_csr = None
+    t.norms = None
     return t

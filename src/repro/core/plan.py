@@ -151,6 +151,25 @@ class MatmulPlan:
     # (transposed layouts with a final C reduce-scatter — DBCSR-style;
     # ``repro.spgemm.stationarity`` chooses under ``stationarity="auto"``).
     stationarity: str = "C"
+    # -- Norm-filter extensions (DBCSR-style on-the-fly filtering) -----------
+    # Product-screening threshold this plan was built with: gemm tasks whose
+    # ``||A_ik||_F * ||B_kj||_F`` bound fell below it were removed from the
+    # masks / device liveness above, so the filtered structure bytes are what
+    # the digest (and therefore the executable cache) sees.  0.0 = off, and
+    # an eps-0 plan is bitwise identical to one planned without norms.
+    filter_eps: float = 0.0
+    # Additive Frobenius-norm error bound on C: the sum of every screened
+    # product ``||A_ik||_F * ||B_kj||_F``.  Execution granularity is
+    # panel-wise, so the measured error is <= this bound (a triple screened
+    # at plan level may still ride along in a panel that survives for
+    # other outputs — the bound never understates).
+    filter_bound: float = 0.0
+    # Propagated per-block output norm *bounds* (M_blk, N_blk float64) when
+    # the plan was given operand norms: ``sum_k ||A_ik|| ||B_kj||`` over the
+    # surviving triples.  Derived metadata (not digested) — chains feed it
+    # forward as the next product's operand norms so iterative C <- A.B
+    # gets progressively sparser.
+    c_norms: np.ndarray | None = None
 
     # -- geometry -----------------------------------------------------------
 
@@ -266,6 +285,8 @@ class MatmulPlan:
             "skipped_per_device_max": int(skipped.max()),
             "lookahead": self.resolve_lookahead(),
             "tuned": self.tuned,
+            "filter_eps": self.filter_eps,
+            "filter_bound": self.filter_bound,
             "fill_in": self.cost.fill_in,
             "flops_dense": self.cost.flops_dense,
             "flops_sparse": self.cost.flops_sparse,
@@ -533,6 +554,7 @@ def _pull_comm_bytes(
     p_col: int,
     itemsize: int,
     b_live_cols: np.ndarray | None,
+    a_fetch_elems: dict[int, float] | None = None,
 ) -> float:
     """Modeled per-device comm bytes of the one-sided pull schedule.
 
@@ -557,7 +579,14 @@ def _pull_comm_bytes(
                 if not device_live[i, j, kk]:
                     continue
                 if p_col > 1 and j != owner_col:
-                    total += m_loc * kb_width * itemsize
+                    # rank-factorized A panels fetch their U/V factors
+                    # instead of the dense slab (repro.spgemm pull + rank)
+                    a_elems = (
+                        a_fetch_elems[kk]
+                        if a_fetch_elems is not None
+                        else m_loc * kb_width
+                    )
+                    total += a_elems * itemsize
                 if p_row > 1 and i != owner_row:
                     b_elems = (
                         float(b_live_cols[kk, j])
@@ -622,6 +651,9 @@ def plan_matmul(
     comm_mode: str = "broadcast",
     stationarity: str = "C",
     itemsize: int = 4,
+    a_norms: np.ndarray | None = None,
+    b_norms: np.ndarray | None = None,
+    filter_eps: float = 0.0,
 ) -> MatmulPlan:
     """Plan C = A @ B on ``cfg``'s grid; the single schedule source.
 
@@ -646,6 +678,26 @@ def plan_matmul(
     only); ``stationarity`` picks which operand stays put ("auto" runs
     the comm-volume chooser over C/A/B).
 
+    Norm filtering (DBCSR-style, ``filter_eps > 0``): ``a_norms`` /
+    ``b_norms`` are per-block Frobenius norms on the operand block grids
+    (``core.sparsity.block_norms`` / ``rank_csr_norms``).  Every (i, k, j)
+    product whose bound ``||A_ik||_F * ||B_kj||_F`` falls below
+    ``filter_eps`` is screened: the operand masks, the output mask, and
+    the per-device panel liveness are all refined to the surviving
+    triples, so downstream consumers — the task graph, the simulator, the
+    executors, and ``digest()`` — see the filtered structure.  Pruning is
+    applied at the engine's task granularity (mask rows/cols, output
+    blocks, per-device k-panels — the projections of the screened triple
+    set): a screened (i, k, j) whose row, column, and output block all
+    stay live elsewhere is still computed by the panel product, which
+    only *lowers* the realized error.  The plan
+    records the additive error bound ``filter_bound`` (the sum of the
+    screened products): ``||C_exact - C_filtered||_F <= filter_bound``,
+    by submultiplicativity of the Frobenius norm per product and the
+    triangle inequality over the sum.  ``filter_eps=0`` is a no-op and
+    returns a plan bitwise identical (same digest) to one planned without
+    norms.
+
     Returns a plan whose ``padded_shapes`` the caller pads operands to
     before ``core.summa.execute_plan`` (or ``execute_rank_plan`` for
     factorized operands).
@@ -661,6 +713,32 @@ def plan_matmul(
             "comm_mode='pull' is a C-stationary pipeline; plan pull and "
             "A-/B-stationary schedules separately"
         )
+    if not (np.isfinite(filter_eps) and filter_eps >= 0.0):
+        raise ValueError(
+            f"filter_eps must be finite and >= 0, got {filter_eps}"
+        )
+    if (a_norms is None) != (b_norms is None):
+        raise ValueError(
+            "per-block norms come in pairs: pass both a_norms and b_norms"
+        )
+    if filter_eps > 0.0 and a_norms is None:
+        raise ValueError(
+            "filter_eps > 0 needs per-block norms for both operands "
+            "(a_norms=/b_norms= — core.sparsity.block_norms)"
+        )
+    if filter_eps <= 0.0:
+        # Filtering off: norms are inert, and the plan must be bitwise
+        # identical to one planned without them (the digest/no-op contract
+        # the executable cache and ``api.plan``'s cache key rely on).
+        a_norms = b_norms = None
+    if a_norms is not None:
+        # A norm grid carries block structure: synthesize the support masks
+        # when the caller gave none, so dense-stored operands can still be
+        # screened.
+        if a_mask is None and a_ranks is None:
+            a_mask = np.asarray(a_norms, np.float64) > 0.0
+        if b_mask is None and b_ranks is None:
+            b_mask = np.asarray(b_norms, np.float64) > 0.0
     p_row, p_col = cfg.p_row, cfg.p_col
     if a_ranks is not None:
         if a_mask is not None:
@@ -784,6 +862,41 @@ def plan_matmul(
     b_mask_p = _pad_block_mask(b_mask, (k_pad // bk_sz, n_pad // bn_sz))
     k_steps = k_pad // bk_sz  # one panel per K block
     kb_width = bk_sz
+
+    # -- norm screening (DBCSR-style product filter) -------------------------
+    # Refine the structure *before* liveness so every downstream consumer
+    # (panel schedule, device liveness, CSR maps, cost model, digest) sees
+    # only the surviving triples.
+    a_norms_p = b_norms_p = None
+    keep = None
+    c_norms = None
+    filter_bound = 0.0
+    if a_norms is not None:
+        def _pad_norms(norms, blocks, blocks_pad, side):
+            arr = np.asarray(norms, dtype=np.float64)
+            if arr.shape != blocks:
+                raise ValueError(
+                    f"{side} norm grid {arr.shape} must match the block "
+                    f"grid {blocks}"
+                )
+            out = np.zeros(blocks_pad)
+            out[: blocks[0], : blocks[1]] = arr
+            return out
+
+        a_norms_p = _pad_norms(
+            a_norms, (m_blk, k_blk), a_mask_p.shape, "a_norms"
+        ) * a_mask_p
+        b_norms_p = _pad_norms(
+            b_norms, (k_blk, n_blk), b_mask_p.shape, "b_norms"
+        ) * b_mask_p
+        from repro.spgemm.structure import filter_keep, output_norms
+
+        if filter_eps > 0.0:
+            keep, filter_bound = filter_keep(a_norms_p, b_norms_p, filter_eps)
+            a_mask_p = a_mask_p & keep.any(axis=2)
+            b_mask_p = b_mask_p & keep.any(axis=0)
+        c_norms = output_norms(a_norms_p, b_norms_p, keep)
+
     live, device_live, b_col = _panel_liveness(
         a_mask_p, b_mask_p, k_steps, p_row, p_col
     )
@@ -792,21 +905,34 @@ def plan_matmul(
     c_mask_p = None
     if c_mask is not None:
         c_mask_p = _pad_block_mask(c_mask, (m_pad // bm_sz, n_pad // bn_sz))
+    if keep is not None:
+        # Screened outputs join the output filter: a C block all of whose
+        # addends were dropped is dead (its norm bound rides in c_norms
+        # only as 0).
+        c_keep = keep.any(axis=1)
+        c_mask_p = c_keep if c_mask_p is None else (c_mask_p & c_keep)
+    if c_mask_p is not None:
         # Dead-output pruning: drop gemm tasks whose C block the output
         # filter kills, then re-derive the live panel set.
         device_live = _refine_device_live_c(
             device_live, a_mask_p, b_mask_p, c_mask_p, p_row, p_col
         )
         live = [kk for kk in live if device_live[:, :, kk].any()]
+    if c_norms is not None and c_mask_p is not None:
+        c_norms = np.where(c_mask_p, c_norms, 0.0)
 
     a_ranks_p = None
     if a_ranks is not None:
         a_ranks_p = np.zeros((m_pad // bm_sz, k_pad // bk_sz), np.int32)
         a_ranks_p[: a_ranks.m_blocks, : a_ranks.k_blocks] = a_ranks.ranks
+        if keep is not None:
+            a_ranks_p = np.where(a_mask_p, a_ranks_p, 0)
     b_ranks_p = None
     if b_ranks is not None:
         b_ranks_p = np.zeros((k_pad // bk_sz, n_pad // bn_sz), np.int32)
         b_ranks_p[: b_ranks.m_blocks, : b_ranks.k_blocks] = b_ranks.ranks
+        if keep is not None:
+            b_ranks_p = np.where(b_mask_p, b_ranks_p, 0)
 
     a_struct = (
         BlockRankMap(ranks=a_ranks_p, bm=bm_sz, bk=bk_sz)
@@ -828,15 +954,17 @@ def plan_matmul(
     local_block = None
     local_impl = "masked"
     # The specialized local executors (factored rank pipeline, Pallas BSMM)
-    # exist only for the default broadcast / C-stationary pipeline; pull
-    # fetches and A-/B-stationary schedules run the masked DAG.
+    # exist only for C-stationary pipelines; A-/B-stationary schedules run
+    # the masked DAG.  The rank pipeline supports both comm modes — pull
+    # fetches the U/V factors themselves (``_exec_ranksparse_pull``) —
+    # while BSMM stays broadcast-only.
     plain_pipeline = comm_mode == "broadcast" and stationarity == "C"
     if a_ranks_p is not None:
         # The factor layout (U panels of uniform width, V rows batched per
         # local block row) needs a payload and row blocks aligned to the
         # grid; otherwise execution (and therefore the schedule model) is
         # the dense-stored masked DAG.
-        if rank_payload and m_blk_p % p_row == 0 and plain_pipeline:
+        if rank_payload and m_blk_p % p_row == 0 and stationarity == "C":
             local_impl = "ranksparse"
     # BSMM needs row blocks aligned to the grid and big enough to make a
     # sane kernel block (>= 8 rows: TPU sublane minimum).
@@ -860,6 +988,7 @@ def plan_matmul(
         sparse = 2.0 * bm_sz * bk_sz * bn_sz * float(pairs[c_mask_p].sum())
     mask_flops = float(sparse)
     a_live_elems = None
+    a_fetch_elems = None
     if a_ranks_p is not None:
         from repro.core.sparsity import (
             rank_matmul_flops,
@@ -880,12 +1009,15 @@ def plan_matmul(
             mb_loc = m_blk_p // p_row
             r_live = a_ranks_p.max(axis=0)  # (K_blk,) per-panel width
             a_live_elems = 0.0
+            a_fetch_elems = {}
             for kk in live:
                 r_k = int(r_live[kk])
                 if rank_panel_factored_comm(r_k, bm_sz, bk_sz):
-                    a_live_elems += m_loc * r_k + mb_loc * r_k * bk_sz
+                    elems = m_loc * r_k + mb_loc * r_k * bk_sz
                 else:
-                    a_live_elems += m_loc * bk_sz
+                    elems = m_loc * bk_sz
+                a_live_elems += elems
+                a_fetch_elems[kk] = float(elems)
     b_live_cols = b_panel_live_elems(
         b_mask_p, b_ranks_p, bk_sz=bk_sz, bn_sz=bn_sz, p_col=p_col
     )
@@ -906,6 +1038,7 @@ def plan_matmul(
         device_live, live, k_steps=k_steps, m_loc=m_loc, kb_width=kb_width,
         n_loc=n_loc, p_row=p_row, p_col=p_col, itemsize=itemsize,
         b_live_cols=b_live_cols,
+        a_fetch_elems=a_fetch_elems if local_impl == "ranksparse" else None,
     )
     p_all = max(p_row * p_col, 1)
     comm["c_stationary"] = stat_vols["C"] / p_all
@@ -926,4 +1059,6 @@ def plan_matmul(
         local_impl=local_impl, cost=cost, itemsize=itemsize,
         a_ranks=a_ranks_p, b_ranks=b_ranks_p, c_mask=c_mask_p,
         comm_mode=comm_mode, stationarity=stationarity,
+        filter_eps=float(filter_eps), filter_bound=filter_bound,
+        c_norms=c_norms,
     )

@@ -45,6 +45,9 @@ __all__ = [
     "rank_panel_factored_comm",
     "rank_panel_factored_compute",
     "rank_matmul_flops",
+    "block_norms",
+    "rank_csr_norms",
+    "norms_key",
 ]
 
 
@@ -510,6 +513,76 @@ def synthesize_rank_csr(
             u[s, :, :r] = rng.normal(size=(bm, r)) * scale
             v[s, :r, :] = rng.normal(size=(r, bk))
     return RankCSR(csr=csr, ranks=ranks, u=u, v=v, bm=bm, bk=bk)
+
+
+# ---------------------------------------------------------------------------
+# Per-block Frobenius norms (DBCSR-style on-the-fly filtering support)
+# ---------------------------------------------------------------------------
+
+
+def block_norms(
+    a: np.ndarray, m_blocks: int, k_blocks: int, *, mask: np.ndarray | None = None
+) -> np.ndarray:
+    """Per-block Frobenius norms of a dense-stored matrix.
+
+    Returns an (m_blocks, k_blocks) float64 grid with ``norms[i, k] =
+    ||A_ik||_F``; blocks outside ``mask`` (when given) are exactly 0 so a
+    norm grid always refines its block mask (``norms > 0`` implies the
+    mask).  This is the payload the DBCSR-style product filter
+    (``plan_matmul(filter_eps=...)``) screens against: a gemm task (i, k,
+    j) contributes at most ``||A_ik||_F * ||B_kj||_F`` to ``||C_ij||_F``
+    (submultiplicativity of the Frobenius norm), so dropping every triple
+    whose bound falls below threshold perturbs C by at most the *sum* of
+    the dropped bounds — the additive error bound the planner records.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    m, k = a.shape
+    if m % m_blocks or k % k_blocks:
+        raise ValueError(
+            f"matrix {a.shape} not divisible by block grid "
+            f"({m_blocks},{k_blocks})"
+        )
+    bm, bk = m // m_blocks, k // k_blocks
+    sq = a.reshape(m_blocks, bm, k_blocks, bk) ** 2
+    norms = np.sqrt(sq.sum(axis=(1, 3)))
+    if mask is not None:
+        norms = np.where(np.asarray(mask, bool), norms, 0.0)
+    return norms
+
+
+def rank_csr_norms(rk: RankCSR) -> np.ndarray:
+    """Per-block Frobenius norms of a factorized :class:`RankCSR`.
+
+    ``||U_s V_s||_F^2 = <U_s^T U_s, V_s V_s^T>`` (trace of the product of
+    the two r x r Grams), so the norms come out of r-sized contractions
+    without reconstructing any bm x bk block.  Absent blocks are 0, same
+    contract as :func:`block_norms`.
+    """
+    norms = np.zeros((rk.csr.m_blocks, rk.csr.n_blocks), np.float64)
+    if rk.nnz:
+        u = np.asarray(rk.u, np.float64)
+        v = np.asarray(rk.v, np.float64)
+        gram_u = np.einsum("smr,smt->srt", u, u)  # (nnz, r_pad, r_pad)
+        gram_v = np.einsum("srk,stk->srt", v, v)
+        sq = np.einsum("srt,srt->s", gram_u, gram_v)
+        vals = np.sqrt(np.maximum(sq, 0.0))
+        for i in range(rk.csr.m_blocks):
+            lo, hi = rk.csr.row_ptr[i], rk.csr.row_ptr[i + 1]
+            norms[i, rk.csr.col_idx[lo:hi]] = vals[lo:hi]
+    return norms
+
+
+def norms_key(norms: np.ndarray | None) -> str | None:
+    """Stable content digest of a norm grid (plan-cache key component)."""
+    if norms is None:
+        return None
+    import hashlib
+
+    arr = np.ascontiguousarray(np.asarray(norms, np.float64))
+    h = hashlib.sha1()
+    h.update(str(arr.shape).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
 
 
 #: executed-efficiency margin for the factored-compute decision: the

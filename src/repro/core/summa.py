@@ -242,11 +242,34 @@ def _bcast_panel(local_slab, owner, axis_name):
 
 
 def _local_dot(a_panel, b_panel, accum, cfg: SummaConfig):
-    if cfg.local_matmul == "pallas":
+    """Local panel product; consults the kernel autotune cache.
+
+    ``cfg.local_matmul`` is the static policy, but when the autotune
+    cache (``kernels.autotune``) holds a measured winner for this panel
+    shape's bucket, the cached route overrides the generic choice —
+    lookup-only, so a cold or disabled cache reproduces the pre-autotune
+    trace bitwise (the cache fingerprint is part of the executable key).
+    """
+    from repro.kernels.autotune import autotune_cache
+
+    route = "pallas" if cfg.local_matmul == "pallas" else "xla"
+    entry = autotune_cache().lookup(
+        a_panel.shape[0], a_panel.shape[1], b_panel.shape[1],
+        dtype=a_panel.dtype,
+    )
+    tiles = None
+    if entry is not None and entry["winner"] in ("pallas", "xla"):
+        route = entry["winner"]
+        tiles = entry.get("tiles")
+    if route == "pallas":
         from repro.kernels import ops as kops
 
+        tile_kw = (
+            {"bm": tiles[0], "bk": tiles[1], "bn": tiles[2]}
+            if tiles else {}
+        )
         prod = kops.tiled_matmul(
-            a_panel, b_panel, accum_dtype=cfg.accum_dtype
+            a_panel, b_panel, accum_dtype=cfg.accum_dtype, **tile_kw
         ).astype(cfg.accum_dtype)
         return accum + prod
     prod = jnp.matmul(a_panel, b_panel, preferred_element_type=cfg.accum_dtype)
@@ -569,6 +592,80 @@ def _exec_ranksparse(u_loc, v_loc, b_loc, plan, *, r_pad: int):
     return c
 
 
+def _exec_ranksparse_pull(u_loc, v_loc, b_loc, plan, *, r_pad: int):
+    """One-sided pull of *factorized* A panels (``comm_mode="pull"``).
+
+    The RDMA-SpGEMM gets fetch the U/V factors themselves — bytes follow
+    the per-block rank, never the dense panel, until a panel crosses
+    r* = bm·bk/(bm+bk) (``rank_panel_factored_comm``), where the owner
+    would serve the reconstructed dense panel instead.  Like
+    ``_exec_sparse_pull`` this *emulates* the gets in static SPMD: one
+    all-gather per factor operand, then static indexed reads of exactly
+    the live panels; the fetch-level cost model (factor-1.0 rank-sized
+    bytes, owner-clock contention) lives in ``sched.taskgraph``.  The
+    per-panel compute decisions mirror ``_exec_ranksparse`` term for
+    term — same panels, same order, same batched factored contraction —
+    so pull pins bitwise-equal against the broadcast rank path in the
+    differential oracle.
+    """
+    from repro.core.sparsity import (
+        rank_panel_factored_comm,
+        rank_panel_factored_compute,
+    )
+
+    cfg = plan.cfg
+    bk = plan.kb_width
+    m_loc, n_loc = u_loc.shape[0], b_loc.shape[1]
+    mb_loc = v_loc.shape[0] // r_pad
+    bm = m_loc // mb_loc
+    widths = _rank_panel_widths(plan)
+    u_full = jax.lax.all_gather(u_loc, cfg.col_axis, axis=1, tiled=True)
+    v_full = jax.lax.all_gather(v_loc, cfg.col_axis, axis=1, tiled=True)
+    b_full = jax.lax.all_gather(b_loc, cfg.row_axis, axis=0, tiled=True)
+
+    c = jnp.zeros((m_loc, n_loc), cfg.accum_dtype)
+    u_parts = []
+    w_parts = []
+    for kk in plan.live_panels:
+        r_k = min(widths[kk], r_pad)
+        u_panel = jax.lax.slice_in_dim(
+            u_full, kk * r_pad, kk * r_pad + r_k, axis=1
+        )
+        v_panel = jax.lax.slice_in_dim(
+            v_full, kk * bk, (kk + 1) * bk, axis=1
+        ).reshape(mb_loc, r_pad, bk)[:, :r_k, :]
+        b_panel = jax.lax.slice_in_dim(
+            b_full, kk * bk, (kk + 1) * bk, axis=0
+        )
+        if rank_panel_factored_comm(r_k, bm, bk) and (
+            rank_panel_factored_compute(r_k, bm, bk, n_loc)
+        ):
+            u_parts.append(u_panel.reshape(mb_loc, bm, r_k))
+            w_parts.append(
+                jnp.einsum(
+                    "irk,kn->irn", v_panel, b_panel,
+                    preferred_element_type=cfg.accum_dtype,
+                )
+            )
+        else:
+            # dense-panel fetch (past the comm crossover) or fused-dot
+            # compute preference: reconstruct and run the dense dot —
+            # identical arithmetic to the broadcast executor's fallbacks
+            a_panel = jnp.einsum(
+                "ibr,irk->ibk", u_panel.reshape(mb_loc, bm, r_k), v_panel,
+                preferred_element_type=cfg.accum_dtype,
+            ).reshape(m_loc, bk).astype(u_loc.dtype)
+            c = _local_dot(a_panel, b_panel, c, cfg)
+    if u_parts:
+        u_cat = jnp.concatenate(u_parts, axis=2)
+        w_cat = jnp.concatenate(w_parts, axis=1)
+        c = c + jnp.einsum(
+            "ibR,iRn->ibn", u_cat, w_cat,
+            preferred_element_type=cfg.accum_dtype,
+        ).reshape(m_loc, n_loc)
+    return c
+
+
 def _exec_ranksparse_grouped(u_loc, v_loc, b_loc, plan, *, r_pad: int):
     """Rank-sparse update through the grouped-gemm Pallas kernel.
 
@@ -698,7 +795,19 @@ def _is_traced(*arrays) -> bool:
     return any(isinstance(x, jax.core.Tracer) for x in arrays)
 
 
+def _autotune_key_suffix() -> tuple:
+    # A non-empty kernel-autotune cache changes what ``_local_dot`` traces,
+    # so its content fingerprint joins executable cache keys; when the
+    # cache is empty or disabled the suffix is empty and keys stay bitwise
+    # pre-autotune.
+    from repro.kernels.autotune import cache_fingerprint
+
+    fp = cache_fingerprint()
+    return (fp,) if fp else ()
+
+
 def _cached_executable(key: tuple, build: Callable) -> Callable:
+    key = key + _autotune_key_suffix()
     fn = _EXEC_CACHE.get(key)
     if fn is None:
         _EXEC_STATS["misses"] += 1
@@ -1013,11 +1122,17 @@ def _execute_rank_plan_eager(
     spec2 = P(cfg.row_axis, cfg.col_axis)
     if plan.b_mask is not None:
         b = _apply_block_mask(b, plan.b_mask)
-    local = (
-        _exec_ranksparse_grouped
-        if cfg.local_matmul == "pallas"
-        else _exec_ranksparse
-    )
+    if getattr(plan, "comm_mode", "broadcast") == "pull":
+        # factor-fetching pull route (repro.spgemm): rank-sized gets for
+        # both local_matmul flavors — the grouped kernel's gather stage is
+        # broadcast-shaped, so pull always runs the indexed-read emulation
+        local = _exec_ranksparse_pull
+    else:
+        local = (
+            _exec_ranksparse_grouped
+            if cfg.local_matmul == "pallas"
+            else _exec_ranksparse
+        )
 
     def fn_rank(u_loc, v_loc, b_loc):
         c = local(u_loc, v_loc, b_loc, plan, r_pad=r_pad)

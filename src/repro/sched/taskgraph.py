@@ -333,6 +333,133 @@ def _emit_pull_pipeline(
         accum_hist.append(dict(prev_accum))
 
 
+def _emit_stationary(b: _Builder, plan) -> None:
+    """The A-/B-stationary schedule as an explicit DAG (repro.spgemm).
+
+    Mirrors ``summa._execute_plan_eager``'s transposed executors exactly:
+    one re-layout of the *moving* operand (modeled broadcast-as-allreduce
+    along the grid axis the stationarity chooser charges), one dense
+    local dot per device — the executors prune structure at the value
+    level only, so the honest FLOP charge is the full local product —
+    and one bandwidth-optimal reduce-scatter of the partial C tiles per
+    scatter group, factor ``(g-1)/g``.  No K pipeline, so no
+    multiple-issue window.
+    """
+    p_row, p_col = b.p_row, b.p_col
+    itemsize = plan.itemsize
+    m_loc = plan.m_pad // p_row
+    n_loc = plan.n_pad // p_col
+    accum = float(m_loc * n_loc)
+
+    def _kshard_elems(density: np.ndarray, n_groups: int) -> np.ndarray:
+        """Split a per-K-element live-element density into the ``n_groups``
+        contiguous K shards the re-layout distributes (total preserved even
+        when shards straddle block boundaries)."""
+        if density.size % n_groups == 0:
+            return density.reshape(n_groups, -1).sum(axis=1)
+        return np.full(n_groups, density.sum() / n_groups)
+
+    if plan.stationarity == "A":
+        # B re-lays out to P(col_axis, None): the grid-column group j
+        # receives B's K-shard j (all N columns), then partial C tiles
+        # reduce-scatter along the columns of each grid row.
+        b_mask = getattr(plan, "b_mask", None)
+        if b_mask is not None:
+            kb_sz = plan.k_pad // b_mask.shape[0]
+            bn_sz = plan.n_pad // b_mask.shape[1]
+            dens = np.repeat(
+                b_mask.sum(axis=1).astype(np.float64) * bn_sz, kb_sz
+            )
+        else:
+            dens = np.full(plan.k_pad, float(plan.n_pad))
+        shard_elems = _kshard_elems(dens, p_col)
+        relay: dict[int, int] = {}
+        if p_row > 1:  # same gate as the chooser's BCAST·vol_b·row term
+            for j in range(p_col):
+                bytes_ = BCAST_FACTOR * float(shard_elems[j]) * itemsize
+                if bytes_ <= 0:
+                    continue
+                group = [b.dev(i, j) for i in range(p_row)]
+                relay[j] = b.add(
+                    "bcast_b", 0, group, "comm", bytes=bytes_
+                )
+        gemm_flops = 2.0 * m_loc * (plan.k_pad // max(p_col, 1)) * plan.n_pad
+        scatter_bytes = (
+            (p_col - 1) / p_col * m_loc * plan.n_pad * itemsize
+            if p_col > 1 else 0.0
+        )
+        gemms: dict[tuple[int, int], int] = {}
+        for i in range(p_row):
+            for j in range(p_col):
+                deps = [relay[j]] if j in relay else []
+                gemms[i, j] = b.add(
+                    "gemm", 0, (b.dev(i, j),), "compute", deps=deps,
+                    flops=gemm_flops,
+                )
+        for i in range(p_row):
+            group = [b.dev(i, j) for j in range(p_col)]
+            deps = [gemms[i, j] for j in range(p_col)]
+            rid = (
+                b.add("reduce", 0, group, "comm", deps=deps,
+                      bytes=scatter_bytes)
+                if scatter_bytes > 0 else None
+            )
+            for j in range(p_col):
+                b.add(
+                    "accum", 0, (b.dev(i, j),), "compute",
+                    deps=(rid,) if rid is not None else (gemms[i, j],),
+                    flops=accum,
+                )
+    else:  # "B": A re-lays out to P(None, row_axis), scatter along rows
+        a_mask = getattr(plan, "a_mask", None)
+        if a_mask is not None:
+            bm_sz = plan.m_pad // a_mask.shape[0]
+            ka_sz = plan.k_pad // a_mask.shape[1]
+            dens = np.repeat(
+                a_mask.sum(axis=0).astype(np.float64) * bm_sz, ka_sz
+            )
+        else:
+            dens = np.full(plan.k_pad, float(plan.m_pad))
+        shard_elems = _kshard_elems(dens, p_row)
+        relay = {}
+        if p_col > 1:  # same gate as the chooser's BCAST·vol_a·col term
+            for i in range(p_row):
+                bytes_ = BCAST_FACTOR * float(shard_elems[i]) * itemsize
+                if bytes_ <= 0:
+                    continue
+                group = [b.dev(i, j) for j in range(p_col)]
+                relay[i] = b.add(
+                    "bcast_a", 0, group, "comm", bytes=bytes_
+                )
+        gemm_flops = 2.0 * plan.m_pad * (plan.k_pad // max(p_row, 1)) * n_loc
+        scatter_bytes = (
+            (p_row - 1) / p_row * plan.m_pad * n_loc * itemsize
+            if p_row > 1 else 0.0
+        )
+        gemms = {}
+        for i in range(p_row):
+            for j in range(p_col):
+                deps = [relay[i]] if i in relay else []
+                gemms[i, j] = b.add(
+                    "gemm", 0, (b.dev(i, j),), "compute", deps=deps,
+                    flops=gemm_flops,
+                )
+        for j in range(p_col):
+            group = [b.dev(i, j) for i in range(p_row)]
+            deps = [gemms[i, j] for i in range(p_row)]
+            rid = (
+                b.add("reduce", 0, group, "comm", deps=deps,
+                      bytes=scatter_bytes)
+                if scatter_bytes > 0 else None
+            )
+            for i in range(p_row):
+                b.add(
+                    "accum", 0, (b.dev(i, j),), "compute",
+                    deps=(rid,) if rid is not None else (gemms[i, j],),
+                    flops=accum,
+                )
+
+
 # ---------------------------------------------------------------------------
 # builder 1: from a MatmulPlan
 # ---------------------------------------------------------------------------
@@ -424,6 +551,19 @@ def from_plan(
         "a_owner": [int(kk // t_a) for kk in steps],
     }
 
+    if getattr(plan, "stationarity", "C") != "C":
+        # A-/B-stationary schedules have no K pipeline: one re-layout of
+        # the moving operand, one local dot per device, one reduce-scatter
+        # per group (satellite of repro.spgemm — the chooser can pick
+        # these, so the DAG layer must materialize them too).
+        meta["strategy"] = "stationary"
+        meta["stationarity"] = plan.stationarity
+        meta["lookahead"] = 1
+        _emit_stationary(b, plan)
+        graph = b.graph(1, 1, meta)
+        graph.validate()
+        return graph
+
     if strategy == "allgather":
         if plan.local_impl != "dense":
             raise ValueError("allgather graph is dense-only (sparsity-blind)")
@@ -507,8 +647,35 @@ def from_plan(
         )
 
     if getattr(plan, "comm_mode", "broadcast") == "pull":
-        if plan.local_impl != "masked" or plan.device_live is None:
-            raise ValueError("pull graphs need a masked plan")
+        if plan.local_impl == "masked":
+            if plan.device_live is None:
+                raise ValueError("pull graphs need per-device liveness")
+        elif plan.local_impl != "ranksparse":
+            raise ValueError("pull graphs need a masked or rank-sparse plan")
+        if plan.local_impl == "ranksparse":
+            # A fetches move factor panels while they beat the dense
+            # panel: m_loc·r_k U rows plus mb_loc·r_k·kb V rows, the same
+            # per-panel crossover ``core.plan._pull_comm_bytes`` charges
+            # and ``summa._exec_ranksparse_pull`` slices.
+            from repro.core.sparsity import rank_panel_factored_comm
+
+            mb_loc_r = plan.a_ranks.shape[0] // p_row
+            bm_sz_r = plan.m_pad // plan.a_ranks.shape[0]
+            r_live = plan.a_ranks.max(axis=0)
+
+            def a_fetch_bytes(t, i):
+                r_k = max(int(r_live[steps[t]]), 1)
+                elems = (
+                    m_loc * r_k + mb_loc_r * r_k * kb
+                    if rank_panel_factored_comm(r_k, bm_sz_r, kb)
+                    else m_loc * kb
+                )
+                return float(elems) * itemsize
+        else:
+
+            def a_fetch_bytes(t, i):
+                return float(m_loc * kb * itemsize)
+
         t_b = max(plan.k_steps // p_row, 1)
         meta["b_owner"] = [int(kk // t_b) for kk in steps]
         _emit_pull_pipeline(
@@ -517,7 +684,7 @@ def from_plan(
             lookahead=window,
             owner_col=lambda t: int(steps[t] // t_a),
             owner_row=lambda t: int(steps[t] // t_b),
-            a_fetch_bytes=lambda t, i: float(m_loc * kb * itemsize),
+            a_fetch_bytes=a_fetch_bytes,
             b_fetch_bytes=lambda t, j: (
                 float(b_live[steps[t], j]) * itemsize
                 if b_live is not None

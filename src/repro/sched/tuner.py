@@ -116,23 +116,40 @@ def tune_plan(
         # one-sided pull schedule wins when fill is low enough that
         # per-gemm fetches beat panel broadcasts (repro.spgemm), and the
         # fetch graph's owner-clock contention is exactly what the
-        # simulator prices.  Factored/bsmm plans keep their broadcast
-        # pipeline (their executors are broadcast-only).
-        modes = ["broadcast"]
-        if (
-            plan.local_impl == "masked"
-            and plan.a_ranks is None
-            and getattr(plan, "stationarity", "C") == "C"
-        ):
-            modes = ["broadcast", "pull"]
-        for mode in modes:
-            if mode == getattr(plan, "comm_mode", "broadcast"):
-                cand = plan
-            else:
-                cand = dataclasses.replace(plan, comm_mode=mode)
-            for la in lookahead_candidates(plan.p_row, plan.p_col,
-                                           len(plan.live_panels)):
-                consider(cand, "taskbased", la)
+        # simulator prices.  Rank-sparse plans pull factor panels
+        # (``summa._exec_ranksparse_pull``); bsmm plans keep their
+        # broadcast pipeline (their executor is broadcast-only).
+        # Masked plans additionally search the stationarity axis: the
+        # A-/B-stationary schedules execute the same product through
+        # summa's transposed executors, so the tuner may pick them on
+        # *simulated* makespan rather than the chooser's modeled bytes.
+        base_st = getattr(plan, "stationarity", "C")
+        stats = [base_st]
+        if plan.local_impl == "masked" and base_st == "C":
+            stats = ["C", "A", "B"]
+        for st in stats:
+            st_plan = (
+                plan if st == base_st
+                else dataclasses.replace(plan, stationarity=st)
+            )
+            if st != "C":
+                # stationary schedules have no K pipeline — one candidate,
+                # no multiple-issue window to sweep
+                consider(st_plan, "taskbased", 1)
+                continue
+            modes = ["broadcast"]
+            if (
+                plan.local_impl == "masked" and plan.a_ranks is None
+            ) or plan.local_impl == "ranksparse":
+                modes = ["broadcast", "pull"]
+            for mode in modes:
+                if mode == getattr(st_plan, "comm_mode", "broadcast"):
+                    cand = st_plan
+                else:
+                    cand = dataclasses.replace(st_plan, comm_mode=mode)
+                for la in lookahead_candidates(plan.p_row, plan.p_col,
+                                               len(plan.live_panels)):
+                    consider(cand, "taskbased", la)
     else:
         for kb in _k_block_candidates(base_cfg, plan.k_steps):
             if kb == base_cfg.k_blocks:
@@ -164,6 +181,8 @@ def tune_plan(
         "strategy": win_strategy,
         "k_blocks": win_plan.k_steps,
         "lookahead": int(win_la),
+        "stationarity": getattr(win_plan, "stationarity", "C"),
+        "comm_mode": getattr(win_plan, "comm_mode", "broadcast"),
         **_sim_summary(win_sim),
         "static_strategy": static_strategy,
         "static_makespan_s": static_sim.makespan_s,

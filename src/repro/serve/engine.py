@@ -45,6 +45,7 @@ __all__ = [
     "decode_step",
     "cache_len",
     "warm_matmul_plans",
+    "warm_kernel_cache",
 ]
 
 
@@ -93,6 +94,46 @@ def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
         for p in {id(p): p for p in plans}.values():
             sm.warm_plan_executable(p, jnp.dtype(cfg.dtype))
     return plans
+
+
+def warm_kernel_cache(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
+                      prompt_len: int, *, path: str | None = None,
+                      routes: tuple[str, ...] | None = None,
+                      repeats: int = 3):
+    """Tune the kernel-autotune buckets for every *local* gemm shape the
+    serving projections produce, and persist the winners.
+
+    The per-plan local panel product is ``(m_loc, kb_width) @ (kb_width,
+    n_loc)`` — that shape (bucketed) is what ``summa._local_dot`` will
+    look up at trace time, so tuning here moves the benchmarking out of
+    the serving path exactly like :func:`warm_matmul_plans` moves the
+    simulator search out of it.  ``path`` writes the JSON cache file
+    (restore it in a later process via the ``REPRO_AUTOTUNE_CACHE`` env
+    var or ``KernelAutotuner.load``); ``routes`` restricts the benchmark
+    sweep (interpret-mode structured kernels are slow off-TPU).  Warm the
+    kernel cache **before** :func:`warm_matmul_plans`: executable cache
+    keys carry the autotune fingerprint, so executables warmed against a
+    cold kernel cache are re-traced once it fills.  Returns the tuned
+    bucket keys.
+    """
+    from repro.kernels.autotune import autotune_cache, bucket_key
+
+    plans = warm_matmul_plans(cfg, ctx, batch, prompt_len,
+                              warm_executables=False)
+    cache = autotune_cache()
+    tuned = []
+    for p in plans:
+        m_loc = p.m_pad // p.p_row
+        n_loc = p.n_pad // p.p_col
+        key = bucket_key(m_loc, p.kb_width, n_loc, dtype=cfg.dtype)
+        if key in tuned:
+            continue
+        cache.tune(m_loc, p.kb_width, n_loc, dtype=cfg.dtype,
+                   repeats=repeats, routes=routes)
+        tuned.append(key)
+    if path is not None:
+        cache.save(path)
+    return tuned
 
 
 def cache_len(cfg: ModelConfig, max_len: int) -> int:

@@ -28,8 +28,10 @@ from repro.spgemm.stationarity import (
 from repro.spgemm.structure import (
     as_block_mask,
     as_rank_grid,
+    filter_keep,
     live_elems,
     output_mask,
+    output_norms,
     output_rank_bound,
 )
 
@@ -39,7 +41,9 @@ __all__ = [
     "stationarity_comm_volumes",
     "as_block_mask",
     "as_rank_grid",
+    "filter_keep",
     "live_elems",
     "output_mask",
+    "output_norms",
     "output_rank_bound",
 ]

@@ -32,6 +32,8 @@ __all__ = [
     "output_mask",
     "output_rank_bound",
     "live_elems",
+    "filter_keep",
+    "output_norms",
 ]
 
 
@@ -130,6 +132,57 @@ def output_rank_bound(a_structure, b_structure) -> np.ndarray | None:
     per = np.minimum(per, big)  # mask x mask addends stay bounded
     per = np.where(per == big, 1, per)
     return per.sum(axis=1)
+
+
+def filter_keep(
+    a_norms: np.ndarray, b_norms: np.ndarray, filter_eps: float
+) -> tuple[np.ndarray, float]:
+    """DBCSR-style product screening on per-block Frobenius norms.
+
+    ``keep[i, k, j]`` is True iff the (i, k, j) gemm's contribution bound
+    ``||A_ik||_F * ||B_kj||_F`` reaches ``filter_eps`` (dead blocks — norm
+    0 — never survive).  Returns ``(keep, bound)`` where ``bound`` is the
+    sum of the dropped nonzero products: by submultiplicativity and the
+    triangle inequality, executing only the kept triples perturbs C by at
+    most ``bound`` in Frobenius norm — the additive error bound
+    ``plan_matmul`` records as ``filter_bound``.  ``keep`` shrinks
+    monotonically in ``filter_eps``, so task counts are monotone too.
+    """
+    a = np.asarray(a_norms, np.float64)
+    b = np.asarray(b_norms, np.float64)
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(
+            f"A col-blocks ({a.shape[1]}) must equal B row-blocks "
+            f"({b.shape[0]})"
+        )
+    prod = a[:, :, None] * b[None, :, :]  # (M, K, N) contribution bounds
+    keep = prod >= float(filter_eps)
+    keep &= prod > 0.0
+    bound = float(prod[(~keep) & (prod > 0.0)].sum())
+    return keep, bound
+
+
+def output_norms(
+    a_norms: np.ndarray,
+    b_norms: np.ndarray,
+    keep: np.ndarray | None = None,
+) -> np.ndarray:
+    """Propagated per-block norm *bounds* for ``C = A . B``.
+
+    ``||C_ij||_F <= sum_k ||A_ik||_F * ||B_kj||_F`` — the norm grids
+    multiply like the matrices themselves.  With ``keep`` (a ``(M, K, N)``
+    screening tensor from :func:`filter_keep`) only surviving triples
+    contribute, so iterative chains see the *filtered* predecessor
+    structure, not the symbolic product: a C block all of whose addends
+    were screened carries bound 0 and drops out of the next product
+    entirely (progressive sparsification, the chain regression pins this).
+    """
+    a = np.asarray(a_norms, np.float64)
+    b = np.asarray(b_norms, np.float64)
+    if keep is None:
+        return a @ b
+    prod = a[:, :, None] * b[None, :, :]
+    return np.where(keep, prod, 0.0).sum(axis=1)
 
 
 def live_elems(structure, shape: tuple[int, int]) -> float:

@@ -1,0 +1,161 @@
+"""Property tests (hypothesis) for norm filtering and the kernel
+autotune cache — random block structures against the additive error
+bound, the ``filter_eps=0`` bitwise no-op, and the winner-never-loses
+contract of recorded autotune entries.
+
+hypothesis is a dev extra (pyproject ``[dev]``); without it this module
+skips rather than fails (CI installs ``[dev]`` and asserts it imports).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import plan_matmul, random_block_mask  # noqa: E402
+from repro.core.sparsity import block_norms  # noqa: E402
+from repro.core.summa import SummaConfig  # noqa: E402
+from repro.spgemm import filter_keep  # noqa: E402
+
+
+class FakeMesh:
+    def __init__(self, sizes):
+        self.shape = sizes
+
+
+def _grid_cfg(p_row, p_col, **kw):
+    return SummaConfig(
+        mesh=FakeMesh({"data": p_row, "model": p_col}),
+        row_axis="data",
+        col_axis="model",
+        **kw,
+    )
+
+
+_blocks = st.integers(min_value=2, max_value=6)
+_grid = st.integers(min_value=1, max_value=4)
+
+
+def _block_matrix(rng, blocks, bs, decay):
+    x = rng.standard_normal((blocks * bs, blocks * bs))
+    scale = np.exp(-decay * np.abs(
+        np.arange(blocks)[:, None] - np.arange(blocks)[None, :]
+    ))
+    return (
+        x.reshape(blocks, bs, blocks, bs) * scale[:, None, :, None]
+    ).reshape(blocks * bs, blocks * bs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    blocks=_blocks,
+    frac=st.floats(min_value=0.0, max_value=1.0),
+    decay=st.floats(min_value=0.0, max_value=2.0),
+)
+def test_filtered_error_within_bound(seed, blocks, frac, decay):
+    """``‖C_exact − C_filtered‖_F ≤ filter_bound`` for any threshold:
+    each dropped (i,k,j) product contributes at most ‖A_ik‖·‖B_kj‖
+    (submultiplicativity), and the bound sums exactly those terms."""
+    bs = 4
+    rng = np.random.default_rng(seed)
+    a = _block_matrix(rng, blocks, bs, decay)
+    b = _block_matrix(rng, blocks, bs, decay)
+    an = block_norms(a, blocks, blocks)
+    bn = block_norms(b, blocks, blocks)
+    eps = frac * float(np.max(an[:, :, None] * bn[None, :, :]))
+    keep, bound = filter_keep(an, bn, eps)
+    # materialize the filtered product: zero the dropped (i,k,j) terms
+    filt = np.zeros_like(a @ b)
+    for i in range(blocks):
+        for j in range(blocks):
+            for k in range(blocks):
+                if keep[i, k, j]:
+                    filt[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] += (
+                        a[i * bs:(i + 1) * bs, k * bs:(k + 1) * bs]
+                        @ b[k * bs:(k + 1) * bs, j * bs:(j + 1) * bs]
+                    )
+    err = float(np.linalg.norm(a @ b - filt))
+    assert err <= bound + 1e-9 * (1.0 + float(np.linalg.norm(a @ b)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    blocks=_blocks,
+    p_row=_grid,
+    p_col=_grid,
+    fill=st.floats(min_value=0.2, max_value=1.0),
+)
+def test_eps_zero_plan_digest_preserved(seed, blocks, p_row, p_col, fill):
+    """Passing norms with ``filter_eps=0`` must be a bitwise no-op on
+    the plan digest — for dense and masked structures alike."""
+    n = blocks * 32
+    cfg = _grid_cfg(p_row, p_col, strategy="taskbased", k_blocks=blocks)
+    rng = np.random.default_rng(seed)
+    if fill < 0.95:
+        mask = random_block_mask(blocks, blocks, fill, seed=seed)
+        norms = np.where(mask, rng.uniform(0.5, 2.0, mask.shape), 0.0)
+        base = plan_matmul(n, n, n, cfg, a_mask=mask, b_mask=mask)
+        p0 = plan_matmul(
+            n, n, n, cfg, a_mask=mask, b_mask=mask,
+            a_norms=norms, b_norms=norms, filter_eps=0.0,
+        )
+    else:
+        norms = rng.uniform(0.5, 2.0, (blocks, blocks))
+        base = plan_matmul(n, n, n, cfg)
+        p0 = plan_matmul(
+            n, n, n, cfg, a_norms=norms, b_norms=norms, filter_eps=0.0
+        )
+    assert p0.digest() == base.digest()
+    assert p0.filter_bound == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    blocks=_blocks,
+    eps_frac=st.floats(min_value=1e-4, max_value=0.5),
+)
+def test_plan_bound_matches_dropped_mass(seed, blocks, eps_frac):
+    """The plan-level ``filter_bound`` equals the filter_keep bound for
+    the same norms/threshold, and task screening is monotone in eps."""
+    n = blocks * 32
+    cfg = _grid_cfg(2, 2, strategy="taskbased", k_blocks=blocks)
+    rng = np.random.default_rng(seed)
+    an = rng.uniform(0.0, 1.0, (blocks, blocks))
+    bn = rng.uniform(0.0, 1.0, (blocks, blocks))
+    eps = eps_frac * float(np.max(an[:, :, None] * bn[None, :, :]))
+    keep, bound = filter_keep(an, bn, eps)
+    p = plan_matmul(n, n, n, cfg, a_norms=an, b_norms=bn, filter_eps=eps)
+    assert p.filter_bound == pytest.approx(bound)
+    p_loose = plan_matmul(
+        n, n, n, cfg, a_norms=an, b_norms=bn, filter_eps=eps / 2
+    )
+    assert p_loose.filter_bound <= p.filter_bound + 1e-12
+
+
+# One measured entry shared across examples — tuning is the expensive
+# part; the property quantifies over lookups against it.
+@pytest.fixture(scope="module")
+def tuned_entry():
+    from repro.kernels.autotune import KernelAutotuner
+
+    t = KernelAutotuner()
+    entry = t.tune(48, 48, 48, repeats=1, routes=("xla", "pallas"))
+    return t, entry
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    dm=st.integers(min_value=-15, max_value=15),
+    dk=st.integers(min_value=-15, max_value=15),
+    dn=st.integers(min_value=-15, max_value=15),
+)
+def test_autotune_winner_never_loses_on_own_bucket(tuned_entry, dm, dk, dn):
+    """Every recorded winner beat the generic route when measured, and
+    every shape inside the bucket resolves to that same entry."""
+    t, entry = tuned_entry
+    assert entry["times_s"][entry["winner"]] <= entry["times_s"]["xla"]
+    got = t.lookup(48 + dm, 48 + dk, 48 + dn)
+    assert got is entry
