@@ -1141,6 +1141,136 @@ def bench_filter(json_path: str) -> None:
     print(f"# wrote {json_path}", flush=True)
 
 
+def bench_serve(json_path: str) -> None:
+    """Continuous vs static vs paged serving -> BENCH_serve.json.
+
+    One ragged-arrival trace (adjacent requests alternate short/long
+    decode depths — the shape static batching is worst at), served three
+    ways through the *same* scheduler loop:
+
+    * ``static``     — admit only when every slot is free (classic batch
+                       serving; the baseline).
+    * ``continuous`` — admit into any free slot every step.
+    * ``paged``      — continuous + paged KV backend (``serve.pages``).
+
+    Records tokens/s and p50/p99 per-step latency, asserts all three
+    produce identical greedy outputs per request, and that continuous
+    needs strictly fewer steps than static.  Also round-trips the
+    persistent plan service (``serve.plan_service``): cold warm-up tunes,
+    a restored service re-applies winners with zero tuner runs — the CI
+    gate re-checks that across *processes*.
+    """
+    import json
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.dist.context import ParallelCtx
+    from repro.models.model import init_model
+    from repro.serve import engine
+    from repro.serve.plan_service import PlanService
+    from repro.serve.scheduler import Scheduler, ragged_trace
+
+    cfg = get_config("llama3.2-1b", smoke=True)
+    ctx = ParallelCtx(mesh=None)
+    params = init_model(jax.random.PRNGKey(0), cfg, ctx)
+    n_slots, max_len = 4, 48
+
+    def trace():
+        return ragged_trace(
+            16, prompt_lens=(8, 16), gen_lens=(4, 24),
+            vocab=cfg.vocab_size, seed=7,
+        )
+
+    entries, outputs = {}, {}
+    for name, mode, backend in (
+        ("static", "static", "dense"),
+        ("continuous", "continuous", "dense"),
+        ("paged", "continuous", "paged"),
+    ):
+        sched = Scheduler(
+            params, cfg, ctx, n_slots=n_slots, max_len=max_len,
+            mode=mode, backend=backend, page_size=8,
+        )
+        res = sched.run(trace())
+        outputs[name] = res.pop("outputs")
+        entries[name] = res
+        _row(
+            f"serve_{name}", res["p50_step_ms"] * 1e3,
+            f"tok/s={res['tokens_per_s']:.1f};steps={res['steps']};"
+            f"p99_ms={res['p99_step_ms']:.2f}",
+        )
+    assert outputs["continuous"] == outputs["static"] == outputs["paged"], (
+        "serving modes disagree on greedy outputs"
+    )
+    assert entries["continuous"]["steps"] < entries["static"]["steps"], (
+        entries["continuous"]["steps"], entries["static"]["steps"],
+    )
+    speedup = (
+        entries["continuous"]["tokens_per_s"]
+        / entries["static"]["tokens_per_s"]
+    )
+    _row("serve_speedup", 0.0, f"continuous/static={speedup:.2f}x")
+
+    # plan-service persistence: cold tune -> save -> restore -> zero tunes
+    import os
+    import tempfile
+
+    import numpy as _np
+    from jax.sharding import Mesh
+
+    mesh = Mesh(_np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    pctx = ParallelCtx(mesh=mesh, matmul_strategy="auto")
+    cold = PlanService()
+    engine.warm_matmul_plans(
+        cfg, pctx, n_slots, 16, warm_executables=False, service=cold
+    )
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "plans.json")
+        cold.save(path)
+        warm = PlanService()
+        n_loaded = warm.load(path)
+        engine.warm_matmul_plans(
+            cfg, pctx, n_slots, 16, warm_executables=False, service=warm
+        )
+    plan_svc = {
+        "cold_tunes": cold.stats["tunes"],
+        "warm_tunes": warm.stats["tunes"],
+        "warm_hits": warm.stats["hits"],
+        "entries": n_loaded,
+        "traffic": cold.traffic,
+        "fingerprint_stable": bool(
+            warm.fingerprint() == cold.fingerprint()
+        ),
+    }
+    assert plan_svc["cold_tunes"] > 0, plan_svc
+    assert plan_svc["warm_tunes"] == 0, plan_svc
+    assert plan_svc["fingerprint_stable"], plan_svc
+    _row(
+        "serve_plan_service", 0.0,
+        f"cold_tunes={plan_svc['cold_tunes']};"
+        f"warm_tunes={plan_svc['warm_tunes']}",
+    )
+
+    with open(json_path, "w") as f:
+        json.dump(
+            {
+                "bench": "serve",
+                "trace": {
+                    "requests": 16, "prompt_lens": [8, 16],
+                    "gen_lens": [4, 24], "n_slots": n_slots,
+                    "max_len": max_len,
+                },
+                "entries": entries,
+                "speedup_continuous_vs_static": speedup,
+                "outputs_identical_across_modes": True,
+                "plan_service": plan_svc,
+            },
+            f, indent=2,
+        )
+    print(f"# wrote {json_path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -1150,11 +1280,12 @@ def main() -> None:
     ap.add_argument("--contract-json", default="BENCH_contract.json")
     ap.add_argument("--spgemm-json", default="BENCH_spgemm.json")
     ap.add_argument("--filter-json", default="BENCH_filter.json")
+    ap.add_argument("--serve-json", default="BENCH_serve.json")
     ap.add_argument(
         "--only",
         help="comma-separated list of JSON-writing sections to run "
-        "(ranksparse, sched, summa, contract, spgemm, filter), e.g. "
-        "--only summa,contract (CI artifact jobs)",
+        "(ranksparse, sched, summa, contract, spgemm, filter, serve), "
+        "e.g. --only summa,contract (CI artifact jobs)",
     )
     args = ap.parse_args()
     runners = {
@@ -1164,6 +1295,7 @@ def main() -> None:
         "contract": lambda: bench_contract(args.contract_json),
         "spgemm": lambda: bench_spgemm(args.spgemm_json),
         "filter": lambda: bench_filter(args.filter_json),
+        "serve": lambda: bench_serve(args.serve_json),
     }
     if args.only is not None:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

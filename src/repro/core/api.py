@@ -136,6 +136,7 @@ class DistributedMatmul:
         a_norms: np.ndarray | None = None,
         b_norms: np.ndarray | None = None,
         filter_eps: float = 0.0,
+        k_blocks: int | None = None,
     ) -> MatmulPlan:
         """The (cached) execution plan for a (M, K) x (K, N) product.
 
@@ -157,7 +158,10 @@ class DistributedMatmul:
         with ``filter_eps > 0`` screen small products DBCSR-style; the
         cache key digests the norm grids only when a filter is active, so
         ``filter_eps=0`` calls key (and plan) identically to norm-free
-        ones.
+        ones.  ``k_blocks`` overrides the config's K over-decomposition;
+        together with ``strategy``/``lookahead`` it lets the persistent
+        plan service (``serve.plan_service``) re-apply a stored tuned
+        schedule without re-running the tuner.
         """
         from repro.core.sparsity import norms_key
 
@@ -168,6 +172,8 @@ class DistributedMatmul:
             lookahead, rank_key(b_ranks), mask_key(c_mask), comm_mode,
             stationarity,
         )
+        if k_blocks is not None:
+            key = key + ("k_blocks", int(k_blocks))
         if filter_eps > 0.0:
             key = key + (
                 float(filter_eps), norms_key(a_norms), norms_key(b_norms),
@@ -181,8 +187,11 @@ class DistributedMatmul:
                 if isinstance(b_ranks, RankCSR)
                 else b_ranks
             )
+            cfg = self.config(strategy)
+            if k_blocks is not None:
+                cfg = dataclasses.replace(cfg, k_blocks=int(k_blocks))
             plan = plan_matmul(
-                m, k, n, self.config(strategy),
+                m, k, n, cfg,
                 a_mask=a_mask, b_mask=b_mask, a_ranks=rank_map,
                 b_ranks=b_rank_map, c_mask=c_mask,
                 rank_payload=rank_payload, comm_mode=comm_mode,

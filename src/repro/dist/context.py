@@ -160,7 +160,9 @@ class ParallelCtx:
 
     def plan_projection(
         self, m: int, d_in: int, d_out: int, *, itemsize=4, tune=False,
-        stationarity: str = "C",
+        stationarity: str = "C", strategy: str | None = None,
+        lookahead: int | None = None, comm_mode: str = "broadcast",
+        k_blocks: int | None = None,
     ):
         """Pre-build (and cache) the plan for an (m, d_in)x(d_in, d_out)
         projection — call outside jit so traced call paths (scanned
@@ -170,7 +172,11 @@ class ParallelCtx:
         ``"auto"`` strategy executes), so the simulator search also
         happens outside tracing.  ``stationarity`` forwards to the
         planner (``"auto"`` lets the comm-volume model pick the
-        A-/B-/C-stationary schedule, repro.spgemm).
+        A-/B-/C-stationary schedule, repro.spgemm).  ``strategy`` /
+        ``lookahead`` / ``comm_mode`` / ``k_blocks`` pin a previously
+        tuned schedule explicitly — the persistent plan service
+        (``serve.plan_service``) re-applies stored winners through these
+        instead of re-running the tuner.
         """
         if (
             not self.has_mesh
@@ -184,4 +190,8 @@ class ParallelCtx:
             itemsize=itemsize,
             tune=tune,
             stationarity=stationarity,
+            strategy=strategy,
+            lookahead=lookahead,
+            comm_mode=comm_mode,
+            k_blocks=k_blocks,
         )

@@ -178,22 +178,9 @@ def build_decode_cell(cfg, shape, ctx):
 
 
 def _cache_shardings(cache, ctx: ParallelCtx, batch: int):
-    bs = ctx.dp if batch % max(ctx.dp_size, 1) == 0 else None
-
-    def spec(leaf):
-        # stacked KV: (U, B, Hkv, S, Dh) / tail KV: (B, Hkv, S, Dh)
-        if leaf.ndim >= 4 and leaf.shape[-4] == batch:
-            s = [None] * leaf.ndim
-            s[-4] = bs
-            s[-2] = ctx.tp_axis
-            return NamedSharding(ctx.mesh, P(*s))
-        if leaf.ndim >= 1 and batch in leaf.shape:
-            s = [None] * leaf.ndim
-            s[leaf.shape.index(batch)] = bs
-            return NamedSharding(ctx.mesh, P(*s))
-        return NamedSharding(ctx.mesh, P())
-
-    return jax.tree.map(spec, cache)
+    # One cache-sharding function for the whole codebase: the engine owns
+    # the leaf classification (KV + quant scales vs recurrent state).
+    return engine.cache_shardings(cache, ctx, batch)
 
 
 def _with_shardings(abstract_tree, shardings):

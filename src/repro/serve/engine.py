@@ -12,10 +12,22 @@ Cache kinds per block:
   allows it).
 
 Layout mirrors the model: stacked caches per scan unit + unrolled tail.
-``pos`` counts tokens written so far.
+``pos`` is a per-slot ``(B,)`` vector counting tokens written so far in
+each batch row — rows decode at independent positions, which is what the
+continuous-batching scheduler (``serve.scheduler``) relies on to admit
+and evict requests per step without reshaping live state.  A scalar
+``pos`` (legacy fixed-shape caches) is still accepted and broadcast.
+
+Capacity contract (non-windowed archs): decoding a token at position
+``>= S_cache`` never corrupts the cache — the ring write is dropped — but
+the returned logits for that row attend only to the first ``S_cache``
+tokens, so they are not the true model output.  Drivers must not decode
+past capacity: the serving loops raise :class:`CacheCapacityError`
+instead (windowed archs wrap by design and have no capacity limit).
 """
 from __future__ import annotations
 
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +52,9 @@ from repro.models.recurrent import (
 )
 
 __all__ = [
+    "CacheCapacityError",
     "init_cache",
+    "cache_shardings",
     "prefill",
     "decode_step",
     "cache_len",
@@ -49,8 +63,17 @@ __all__ = [
 ]
 
 
+class CacheCapacityError(RuntimeError):
+    """Decoding would write past the KV cache capacity of a non-windowed
+    arch.  Raised by the serving drivers (``launch.serve``,
+    ``serve.scheduler``) *before* the overflowing decode step — the
+    engine itself drops out-of-capacity writes (never corrupts state) but
+    cannot produce correct logits for tokens beyond ``S_cache``."""
+
+
 def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
-                      prompt_len: int, *, warm_executables: bool = True):
+                      prompt_len: int, *, warm_executables: bool = True,
+                      service=None):
     """Pre-derive the SUMMA ``MatmulPlan``s for every projection shape the
     serving traces will request — prefill flattens (B, S, D) activations
     to M = B*S rows, decode to M = B — so the jitted prefill/decode paths
@@ -63,12 +86,25 @@ def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
     through ``core.summa``'s plan-digest-keyed executable cache at the
     serving dtype, so the first production matmul per shape dispatches a
     pre-compiled program instead of paying the trace+compile there.
+
+    Tuned winners go through the **persistent plan service**
+    (``serve.plan_service``; pass ``service=`` to override the process
+    singleton): shapes whose (shape, structure digest, mesh fingerprint)
+    key is already recorded re-apply the stored (strategy, k_blocks,
+    lookahead, stationarity, comm_mode) without re-running the simulator
+    search — the schedule analogue of ``KernelAutotuner``'s warm restore
+    (seed it across processes via ``REPRO_PLAN_CACHE``).  The traffic
+    shape ``(batch, prompt_len)`` is recorded so the service can pre-warm
+    future processes from the observed distribution.
     Returns the warmed plans; no-op (empty) on the plain-einsum path.
     """
     from repro.core import summa as sm
+    from repro.serve.plan_service import plan_service
 
     if not ctx.has_mesh or ctx.matmul_strategy == "xla" or ctx.pure_dp:
         return []
+    svc = plan_service() if service is None else service
+    svc.record_traffic(batch, prompt_len)
     d = cfg.d_model
     ffs = [cfg.d_ff] if cfg.d_ff else []
     if cfg.moe is not None and cfg.moe.num_shared_experts:
@@ -84,8 +120,8 @@ def warm_matmul_plans(cfg: ModelConfig, ctx: ParallelCtx, batch: int,
         for f in ffs:
             for k_in, n_out in ((d, f), (f, d)):
                 plans.append(
-                    ctx.plan_projection(
-                        m, k_in, n_out, itemsize=itemsize, tune=tune,
+                    svc.plan_projection(
+                        ctx, m, k_in, n_out, itemsize=itemsize, tune=tune,
                         stationarity=stationarity,
                     )
                 )
@@ -216,25 +252,53 @@ def init_cache(
     tail = [
         _block_cache(kind, cfg, batch, max_len, kv_quant) for kind in cfg.tail
     ]
-    return {"units": units, "tail": tail, "pos": jnp.zeros((), jnp.int32)}
+    return {"units": units, "tail": tail, "pos": jnp.zeros((batch,), jnp.int32)}
 
 
-def cache_shardings(cache, ctx: ParallelCtx):
-    """KV caches: batch over DP, S over TP (seq-sharded decode attention);
-    recurrent states: batch over DP."""
-    def spec(leaf):
-        if leaf.ndim >= 4 and leaf.shape[-1] != 3:  # stacked KV: (U,B,H,S,D)
-            # (units?, B, Hkv, S, Dh): S axis = -2
-            base = [None] * leaf.ndim
-            base[-4] = ctx.dp  # B
+#: attn-cache leaf names — KV values plus their int8 quantization scales;
+#: everything else in a block cache is recurrent/conv state.
+_KV_LEAF_KEYS = frozenset({"k", "v", "k_s", "v_s"})
+
+
+def _leaf_key(entry) -> str | int | None:
+    """Dict key / sequence index of one ``KeyPath`` entry."""
+    return getattr(entry, "key", getattr(entry, "idx", None))
+
+
+def cache_batch_axis(path) -> int:
+    """Batch axis of a cache leaf from its tree path: stacked unit caches
+    carry a leading scan dimension, tail caches and ``pos`` do not."""
+    return 1 if _leaf_key(path[0]) == "units" else 0
+
+
+def cache_shardings(cache, ctx: ParallelCtx, batch: int):
+    """Shardings for a serving cache (the one cache-sharding function —
+    ``launch.dryrun`` delegates here).
+
+    * KV values **and their int8 scales** (``k``/``v``/``k_s``/``v_s``,
+      ``(units?, B, Hkv, S, Dh|1)``): batch over DP, S over TP — the
+      seq-sharded decode-attention layout.
+    * recurrent / conv states (``h``/``c``/``n``/``m``/``conv``) and the
+      per-slot ``pos`` vector: batch over DP only.  Classification is by
+      leaf *name and tree path*, never by shape sniffing — stacked conv
+      caches ``(U, B, 3, d)`` and mlstm ``(U, B, nh, dh, dh)`` states must
+      never land an axis on TP.
+    * batch not divisible by the DP degree: the batch axis is replicated
+      (the same explicit fallback ``_decode_attention`` warns about).
+    """
+    bs = ctx.dp if batch % max(ctx.dp_size, 1) == 0 else None
+
+    def spec(path, leaf):
+        base = [None] * leaf.ndim
+        if _leaf_key(path[-1]) in _KV_LEAF_KEYS:
+            base[-4] = bs  # B
             base[-2] = ctx.tp_axis  # S
             return ctx.named(*base)
-        base = [None] * leaf.ndim
-        if leaf.ndim >= 1:
-            pass
+        if leaf.ndim > 0:  # recurrent state or pos: batch over DP
+            base[cache_batch_axis(path)] = bs
         return ctx.named(*base)
 
-    return jax.tree.map(spec, cache)
+    return jax.tree_util.tree_map_with_path(spec, cache)
 
 
 # ---------------------------------------------------------------------------
@@ -327,7 +391,7 @@ def prefill(params, inputs: dict, cfg: ModelConfig, ctx: ParallelCtx, max_len: i
     cache = {
         "units": unit_caches,
         "tail": tail_caches,
-        "pos": jnp.full((), s, jnp.int32),
+        "pos": jnp.full((b,), s, jnp.int32),
     }
     return logits, cache
 
@@ -338,16 +402,22 @@ def prefill(params, inputs: dict, cfg: ModelConfig, ctx: ParallelCtx, max_len: i
 
 
 def _local_ring_update(buf, new_val, slot, offset):
-    """Update position ``slot`` (global) in a seq-shard covering
-    [offset, offset + S_loc): only the owning shard writes — no cross-
-    shard traffic, no re-gather of the sharded cache."""
-    s_loc = buf.shape[2]
-    local = slot - offset
+    """Update per-row positions ``slot`` (global, ``(B,)``) in a seq-shard
+    covering [offset, offset + S_loc): only the owning shard writes — no
+    cross-shard traffic, no re-gather of the sharded cache.  Out-of-range
+    rows (another shard owns the slot, or the slot is past capacity on a
+    non-windowed arch) keep their current value — an overflowing write is
+    *dropped*, never clamped onto the final slot."""
+    b, _, s_loc, _ = buf.shape
+    local = slot - offset  # (B,)
     in_range = (local >= 0) & (local < s_loc)
     lslot = jnp.clip(local, 0, s_loc - 1)
-    cur = jax.lax.dynamic_slice_in_dim(buf, lslot, 1, axis=2)
-    upd = jnp.where(in_range, new_val.astype(buf.dtype), cur)
-    return jax.lax.dynamic_update_slice_in_dim(buf, upd, lslot, axis=2)
+    rows = jnp.arange(b)
+    cur = buf[rows, :, lslot, :]  # (B, Hkv, Dh)
+    upd = jnp.where(
+        in_range[:, None, None], new_val[:, :, 0, :].astype(buf.dtype), cur
+    )
+    return buf.at[rows, :, lslot, :].set(upd)
 
 
 def _decode_attention(q, k_new, v_new, k_cache, v_cache, slot, n_valid,
@@ -356,20 +426,24 @@ def _decode_attention(q, k_new, v_new, k_cache, v_cache, slot, n_valid,
     seq-sharded ring caches (shard-locally) and attend with LSE combine.
 
     q (B, H, Dh); k_new/v_new (B, Hkv, 1, Dh); caches (B, Hkv, S_c, Dh).
-    With ``k_scale``/``v_scale`` the caches are int8 and dequantized
-    in-shard (fused into the matmuls on TPU: reads stay 1 byte/elem).
-    Returns (attention output, updated caches...).
+    ``slot`` / ``n_valid`` are per-row ``(B,)`` vectors (scalars are
+    broadcast) — rows may sit at independent positions (continuous
+    batching).  With ``k_scale``/``v_scale`` the caches are int8 and
+    dequantized in-shard (fused into the matmuls on TPU: reads stay
+    1 byte/elem).  Returns (attention output, updated caches...).
     """
     b, h, dh = q.shape
     hkv = k_cache.shape[1]
     g = h // hkv
     scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    slot = jnp.broadcast_to(jnp.asarray(slot, jnp.int32), (b,))
+    n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (b,))
     quant = k_scale is not None
     if quant:
         kq_new, ks_new = _quantize_kv(k_new)
         vq_new, vs_new = _quantize_kv(v_new)
 
-    def partial_attn(q_l, k_l, v_l, offset, ks_l=None, vs_l=None):
+    def partial_attn(q_l, k_l, v_l, nv_l, offset, ks_l=None, vs_l=None):
         s_loc = k_l.shape[2]
         b_l = q_l.shape[0]  # may be the per-shard batch inside shard_map
         qg = (q_l.astype(jnp.float32) * scale).reshape(b_l, hkv, g, dh)
@@ -379,7 +453,10 @@ def _decode_attention(q, k_new, v_new, k_cache, v_cache, slot, n_valid,
             kf = kf * ks_l
             vf = vf * vs_l
         logits = jnp.einsum("bhgd,bhsd->bhgs", qg, kf)
-        live = (offset + jnp.arange(s_loc))[None, None, None, :] < n_valid
+        live = (
+            (offset + jnp.arange(s_loc))[None, None, None, :]
+            < nv_l[:, None, None, None]
+        )
         logits = jnp.where(live, logits, -1e30)
         m = jnp.max(logits, axis=-1)  # (b,hkv,g)
         p = jnp.exp(logits - m[..., None])
@@ -396,27 +473,28 @@ def _decode_attention(q, k_new, v_new, k_cache, v_cache, slot, n_valid,
         else:
             k_cache = _local_ring_update(k_cache, k_new, slot, 0)
             v_cache = _local_ring_update(v_cache, v_new, slot, 0)
-        m, l, o = partial_attn(q, k_cache, v_cache, 0, k_scale, v_scale)
+        m, l, o = partial_attn(q, k_cache, v_cache, n_valid, 0,
+                               k_scale, v_scale)
         out = o / jnp.maximum(l[..., None], 1e-30)
         out = out.reshape(b, h, dh).astype(q.dtype)
         if quant:
             return out, k_cache, v_cache, k_scale, v_scale
         return out, k_cache, v_cache
 
-    def body(q_l, kn_l, vn_l, k_l, v_l, *scales):
+    def body(q_l, kn_l, vn_l, slot_l, nv_l, k_l, v_l, *scales):
         s_loc = k_l.shape[2]
         offset = jax.lax.axis_index(ctx.tp_axis) * s_loc
         if quant:
             ks_l, vs_l, ksn_l, vsn_l = scales
-            k_l = _local_ring_update(k_l, kn_l, slot, offset)
-            v_l = _local_ring_update(v_l, vn_l, slot, offset)
-            ks_l = _local_ring_update(ks_l, ksn_l, slot, offset)
-            vs_l = _local_ring_update(vs_l, vsn_l, slot, offset)
+            k_l = _local_ring_update(k_l, kn_l, slot_l, offset)
+            v_l = _local_ring_update(v_l, vn_l, slot_l, offset)
+            ks_l = _local_ring_update(ks_l, ksn_l, slot_l, offset)
+            vs_l = _local_ring_update(vs_l, vsn_l, slot_l, offset)
         else:
             ks_l = vs_l = None
-            k_l = _local_ring_update(k_l, kn_l, slot, offset)
-            v_l = _local_ring_update(v_l, vn_l, slot, offset)
-        m, l, o = partial_attn(q_l, k_l, v_l, offset, ks_l, vs_l)
+            k_l = _local_ring_update(k_l, kn_l, slot_l, offset)
+            v_l = _local_ring_update(v_l, vn_l, slot_l, offset)
+        m, l, o = partial_attn(q_l, k_l, v_l, nv_l, offset, ks_l, vs_l)
         m_g = jax.lax.pmax(m, ctx.tp_axis)
         corr = jnp.exp(m - m_g)
         denom = jax.lax.psum(l * corr, ctx.tp_axis)
@@ -427,13 +505,30 @@ def _decode_attention(q, k_new, v_new, k_cache, v_cache, slot, n_valid,
             return out, k_l, v_l, ks_l, vs_l
         return out, k_l, v_l
 
-    bspec = ctx.dp if b % max(ctx.dp_size, 1) == 0 else None
+    if b % max(ctx.dp_size, 1) == 0:
+        bspec = ctx.dp
+    else:
+        # Explicit fallback: a ragged continuous batch that does not
+        # divide the DP degree replicates the *whole cache* on every DP
+        # rank for this step.  That is correct but costly — warn once per
+        # trace so drivers size their slot pools to a DP multiple
+        # (serve.scheduler does) or pad the batch.
+        warnings.warn(
+            f"decode batch {b} is not divisible by dp={ctx.dp_size}: "
+            "KV cache DP sharding is dropped (replicated) for this step; "
+            "pad the batch or use a slot count divisible by dp",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        bspec = None
     cache_spec = P(bspec, None, ctx.tp_axis, None)
     new_spec = P(bspec, None, None, None)  # new token K/V: replicated on S
-    in_specs = [P(bspec, None, None), new_spec, new_spec, cache_spec, cache_spec]
+    row_spec = P(bspec)  # per-row slot / n_valid vectors
+    in_specs = [P(bspec, None, None), new_spec, new_spec, row_spec, row_spec,
+                cache_spec, cache_spec]
     out_specs = [P(bspec, None, None), cache_spec, cache_spec]
     args = [q, kq_new if quant else k_new, vq_new if quant else v_new,
-            k_cache, v_cache]
+            slot, n_valid, k_cache, v_cache]
     if quant:
         in_specs += [cache_spec, cache_spec, new_spec, new_spec]
         out_specs += [cache_spec, cache_spec]
@@ -448,14 +543,18 @@ def _decode_attention(q, k_new, v_new, k_cache, v_cache, slot, n_valid,
 
 
 def _decode_block(kind, p, x_t, positions, cache, pos, cfg, ctx):
-    """x_t (B, D) one token; returns (x_t, new_cache)."""
+    """x_t (B, D) one token at per-row positions ``pos`` (B,); returns
+    (x_t, new_cache).  Non-windowed archs write slot = pos *unclamped*:
+    past capacity the ring update drops the write (saturating semantics —
+    the final KV slot is never silently overwritten forever; see the
+    module capacity contract and :class:`CacheCapacityError`)."""
     if kind == "attn":
         h = L.rmsnorm(p["attn"]["norm"], x_t, cfg.norm_eps)
         q, k, v = _project_qkv(
             p["attn"], h[:, None, :], positions, cfg, ctx
         )  # (B, 1, H, dh)
         s_c = cache["k"].shape[2]
-        slot = pos % s_c if cfg.window is not None else jnp.minimum(pos, s_c - 1)
+        slot = pos % s_c if cfg.window is not None else pos
         k_new = k.transpose(0, 2, 1, 3)  # (B, Hkv, 1, dh)
         v_new = v.transpose(0, 2, 1, 3)
         n_valid = jnp.minimum(pos + 1, s_c)
@@ -493,15 +592,29 @@ def _decode_block(kind, p, x_t, positions, cache, pos, cfg, ctx):
     raise ValueError(kind)
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx):
-    """One decode step.  tokens (B,) int32 -> (logits (B, V), new cache)."""
+def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx,
+                *, active=None):
+    """One decode step.  tokens (B,) int32 -> (logits (B, V), new cache).
+
+    ``cache["pos"]`` is a per-row ``(B,)`` position vector (a legacy
+    scalar is broadcast): rows decode at independent offsets, so a
+    continuous-batching scheduler can hold requests at different depths
+    in one batch.  ``active`` (optional ``(B,)`` bool/int) advances only
+    the marked rows' positions — inactive (free) slots keep ``pos``
+    untouched so an admitted request starts from a clean offset; their
+    ride-along writes land in slots the next prefill overwrites anyway.
+    """
     pos = cache["pos"]
     b = tokens.shape[0]
+    if pos.ndim == 0:  # legacy fixed-shape caches: one position per batch
+        pos = jnp.broadcast_to(pos, (b,))
     x = L.embed(params["embed"], tokens) if cfg.embed_inputs else tokens
     if cfg.rope == "mrope":
-        positions = jnp.broadcast_to(pos[None, None, None], (b, 1, 3)).astype(jnp.int32)
+        positions = jnp.broadcast_to(
+            pos[:, None, None], (b, 1, 3)
+        ).astype(jnp.int32)
     else:
-        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+        positions = pos[:, None].astype(jnp.int32)
 
     def unit_fn(x_t, scanned):
         unit_params, unit_cache = scanned
@@ -532,5 +645,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx):
         logits = L.dense(params["head"], x).astype(jnp.float32)
     else:
         logits = L.unembed(params["embed"], x)
-    new_cache = {"units": new_unit_caches, "tail": new_tail, "pos": pos + 1}
+    advance = 1 if active is None else jnp.asarray(active, jnp.int32)
+    new_cache = {
+        "units": new_unit_caches, "tail": new_tail, "pos": pos + advance,
+    }
     return logits, new_cache

@@ -1,0 +1,319 @@
+"""Paged KV cache: ring KV allocated in fixed-size blocks via a page table.
+
+The block-sparse engine manages matrix panels as fixed-size blocks with
+host-side liveness maps (``core.plan``); this module applies the same
+treatment to KV-cache liveness.  Instead of one contiguous
+``(B, Hkv, S_cache, Dh)`` ring per layer, each layer holds a **page
+pool** ``(n_pages, Hkv, page_size, Dh)`` (stacked ``(U, n_pages, ...)``
+for scanned units) and every batch slot owns an ordered list of page ids
+recorded in a single **page table** shared by all layers — layer ``i``'s
+token ``t`` always lives at ``(table[slot, t // page_size],
+t % page_size)`` of layer ``i``'s pool.  Admitting a request allocates
+pages from the free list as its sequence grows; evicting returns them
+with **no reshaping or compaction of live state** — exactly the property
+the continuous-batching scheduler needs (the flashinfer serving idiom).
+
+Page ``0`` is reserved as the *trash page*: rows with nothing to write
+this step (inactive slots, out-of-capacity positions) are routed there,
+so the decode step stays a fixed-shape program with no per-row branching.
+
+Scope: non-windowed archs (a sliding-window ring is already O(window)
+and gains nothing from paging), ``tp_size == 1`` and ``kv_quant=False``
+— the seq-sharded and int8 decode paths keep the dense ring layout
+(``serve.engine``).  DP sharding of the pool's page axis is a follow-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.context import ParallelCtx
+from repro.models import layers as L
+from repro.models.attention import _project_qkv
+from repro.models.config import ModelConfig
+from repro.serve import engine
+
+__all__ = [
+    "OutOfPages",
+    "PageAllocator",
+    "paged_init_cache",
+    "paged_prefill_write",
+    "paged_decode_step",
+    "gather_pages",
+]
+
+
+class OutOfPages(RuntimeError):
+    """The free list is empty — admission must wait for an eviction."""
+
+
+@dataclasses.dataclass
+class PageAllocator:
+    """Host-side page-table bookkeeping (numpy; no device state).
+
+    ``n_pages`` counts the pool's physical pages *including* the reserved
+    trash page 0, so ``n_pages - 1`` are allocatable.  ``max_pages`` is
+    the per-slot table width: slot capacity = ``max_pages * page_size``
+    tokens.
+    """
+
+    n_pages: int
+    page_size: int
+    n_slots: int
+    max_pages: int
+
+    def __post_init__(self):
+        if self.n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        self.free: list[int] = list(range(self.n_pages - 1, 0, -1))
+        self.slot_pages: list[list[int]] = [[] for _ in range(self.n_slots)]
+        self._table = np.zeros((self.n_slots, self.max_pages), np.int32)
+
+    @property
+    def capacity(self) -> int:
+        """Max tokens one slot can hold."""
+        return self.max_pages * self.page_size
+
+    def n_free(self) -> int:
+        return len(self.free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)  # ceil
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow ``slot`` to cover ``n_tokens`` tokens, allocating from the
+        free list.  Raises :class:`OutOfPages` (allocating nothing) when
+        the free list is short, and ``CacheCapacityError`` past the
+        per-slot table width."""
+        need = self.pages_needed(n_tokens)
+        have = len(self.slot_pages[slot])
+        if need > self.max_pages:
+            raise engine.CacheCapacityError(
+                f"request needs {need} pages > max_pages={self.max_pages} "
+                f"({n_tokens} tokens, page_size={self.page_size})"
+            )
+        grow = need - have
+        if grow <= 0:
+            return
+        if grow > len(self.free):
+            raise OutOfPages(
+                f"slot {slot} needs {grow} pages, {len(self.free)} free"
+            )
+        for _ in range(grow):
+            pid = self.free.pop()
+            self.slot_pages[slot].append(pid)
+            self._table[slot, len(self.slot_pages[slot]) - 1] = pid
+
+    def release(self, slot: int) -> int:
+        """Return ``slot``'s pages to the free list; returns how many."""
+        pages = self.slot_pages[slot]
+        n = len(pages)
+        self.free.extend(reversed(pages))
+        self.slot_pages[slot] = []
+        self._table[slot, :] = 0
+        return n
+
+    def table(self) -> jax.Array:
+        """The device page table ``(n_slots, max_pages)`` int32 (trash page
+        0 for unallocated entries)."""
+        return jnp.asarray(self._table)
+
+
+# ---------------------------------------------------------------------------
+# pool init / prefill scatter / gather
+# ---------------------------------------------------------------------------
+
+
+def _check_paged_supported(cfg: ModelConfig, ctx: ParallelCtx):
+    if cfg.window is not None:
+        raise NotImplementedError(
+            "paged KV targets non-windowed archs (a sliding-window ring is "
+            "already O(window))"
+        )
+    if ctx.kv_quant:
+        raise NotImplementedError("paged + kv_quant: keep the dense ring")
+    if ctx.has_mesh and ctx.tp_size > 1:
+        raise NotImplementedError(
+            "paged + TP seq-sharding: keep the dense ring"
+        )
+
+
+def paged_init_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
+                     page_size: int, ctx: ParallelCtx | None = None):
+    """Like ``engine.init_cache`` but every attn cache is a page pool
+    ``(n_pages, Hkv, page_size, Dh)`` (stacked ``(U, n_pages, ...)``) —
+    note there is **no batch axis** on KV leaves; the page table owns the
+    slot -> page mapping.  Recurrent/conv states and ``pos`` keep their
+    dense per-slot layout (they are O(1) per row; nothing to page)."""
+    if ctx is not None:
+        _check_paged_supported(cfg, ctx)
+    dense = engine.init_cache(cfg, n_slots, page_size)
+
+    def pool(path, leaf):
+        if engine._leaf_key(path[-1]) not in engine._KV_LEAF_KEYS:
+            return leaf
+        # dense: (U?, n_slots, Hkv, page_size, Dh) -> (U?, n_pages, ...)
+        ax = engine.cache_batch_axis(path)
+        shape = leaf.shape[:ax] + (n_pages,) + leaf.shape[ax + 1:]
+        return jnp.zeros(shape, leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(pool, dense)
+
+
+def _scatter_tokens(pool, kv, pages, n_tokens: int, page_size: int):
+    """Write ``kv`` ``(1, Hkv, S, Dh)`` tokens ``[0, n_tokens)`` into
+    ``pool`` ``(n_pages, Hkv, page_size, Dh)`` at the slot's ``pages``."""
+    t = np.arange(n_tokens)
+    page_ids = jnp.asarray(np.asarray(pages, np.int32)[t // page_size])
+    within = jnp.asarray(t % page_size)
+    vals = kv[0, :, :n_tokens, :].transpose(1, 0, 2)  # (S, Hkv, Dh)
+    return pool.at[page_ids, :, within, :].set(vals.astype(pool.dtype))
+
+
+def paged_prefill_write(pools, dense_cache, alloc: PageAllocator, slot: int,
+                        n_tokens: int):
+    """Scatter one request's dense prefill KV (``engine.prefill`` with
+    batch 1) into the page pools at ``slot``'s pages (allocate first with
+    ``alloc.ensure``).  Non-KV leaves are left untouched — the scheduler
+    writes those rows directly.  Returns the updated pools tree."""
+    pages = alloc.slot_pages[slot]
+
+    def write(path, pool, sub):
+        if engine._leaf_key(path[-1]) not in engine._KV_LEAF_KEYS:
+            return pool
+        if engine.cache_batch_axis(path) == 1:  # stacked units: vmap U
+            return jax.vmap(
+                lambda p, s: _scatter_tokens(
+                    p, s, pages, n_tokens, alloc.page_size
+                )
+            )(pool, sub)
+        return _scatter_tokens(pool, sub, pages, n_tokens, alloc.page_size)
+
+    return jax.tree_util.tree_map_with_path(write, pools, dense_cache)
+
+
+def gather_pages(pool, table):
+    """``(n_pages, Hkv, ps, Dh)`` x ``(B, max_pages)`` ->
+    ``(B, Hkv, max_pages * ps, Dh)`` contiguous per-slot KV views."""
+    g = pool[table]  # (B, max_pages, Hkv, ps, Dh)
+    b, mp, hkv, ps, dh = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, mp * ps, dh)
+
+
+# ---------------------------------------------------------------------------
+# paged decode
+# ---------------------------------------------------------------------------
+
+
+def _paged_attn_block(p, x_t, positions, cache, pos, table, cfg, ctx):
+    """The paged twin of ``engine._decode_block``'s attn branch: scatter
+    the new token's K/V through the page table, then attend over the
+    gathered per-slot views.  Out-of-capacity / unmapped positions write
+    to trash page 0 (dropped — same saturating contract as the ring)."""
+    b = x_t.shape[0]
+    ps = cache["k"].shape[2]
+    max_pages = table.shape[1]
+    h = L.rmsnorm(p["attn"]["norm"], x_t, cfg.norm_eps)
+    q, k, v = _project_qkv(p["attn"], h[:, None, :], positions, cfg, ctx)
+    k_new = k.transpose(0, 2, 1, 3)  # (B, Hkv, 1, dh)
+    v_new = v.transpose(0, 2, 1, 3)
+
+    rows = jnp.arange(b)
+    page_idx = jnp.clip(pos // ps, 0, max_pages - 1)
+    in_range = pos < max_pages * ps
+    page = jnp.where(in_range, table[rows, page_idx], 0)  # trash when OOB
+    within = pos % ps
+    k_pool = cache["k"].at[page, :, within, :].set(
+        k_new[:, :, 0, :].astype(cache["k"].dtype)
+    )
+    v_pool = cache["v"].at[page, :, within, :].set(
+        v_new[:, :, 0, :].astype(cache["v"].dtype)
+    )
+
+    kf = gather_pages(k_pool, table).astype(jnp.float32)
+    vf = gather_pages(v_pool, table).astype(jnp.float32)
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    g = hq // hkv
+    n_valid = jnp.minimum(pos + 1, max_pages * ps)
+    qg = (
+        q.reshape(b, hq, dh).astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))
+    ).reshape(b, hkv, g, dh)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, kf)
+    live = (
+        jnp.arange(kf.shape[2])[None, None, None, :]
+        < n_valid[:, None, None, None]
+    )
+    logits = jnp.where(live, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", w, vf).reshape(b, hq * dh)
+    x_t = x_t + L.dense(p["attn"]["wo"], o.astype(x_t.dtype))
+    if "moe" in p:
+        from repro.models.moe import moe_ffn
+
+        y, _ = moe_ffn(p["moe"], x_t[:, None, :], cfg, ctx)
+        x_t = x_t + y[:, 0]
+    elif "ffn" in p:
+        from repro.models.ffn import ffn
+
+        x_t = x_t + ffn(p["ffn"], x_t[:, None, :], cfg, ctx)[:, 0]
+    return x_t, {"k": k_pool, "v": v_pool}
+
+
+def paged_decode_step(params, cache, tokens, table, cfg: ModelConfig,
+                      ctx: ParallelCtx, *, active=None):
+    """``engine.decode_step`` over page pools: same per-row ``pos``
+    vector and ``active`` advancement, but attn KV lives behind
+    ``table`` ``(B, max_pages)`` int32.  The table is a traced operand —
+    admissions/evictions change its *values*, never the program."""
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    x = L.embed(params["embed"], tokens) if cfg.embed_inputs else tokens
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(
+            pos[:, None, None], (b, 1, 3)
+        ).astype(jnp.int32)
+    else:
+        positions = pos[:, None].astype(jnp.int32)
+
+    def block(kind, p, x_t, c):
+        if kind == "attn":
+            return _paged_attn_block(
+                p, x_t, positions, c, pos, table, cfg, ctx
+            )
+        return engine._decode_block(kind, p, x_t, positions, c, pos, cfg, ctx)
+
+    def unit_fn(x_t, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            x_t, c = block(kind, unit_params[f"b{j}"], x_t, unit_cache[f"b{j}"])
+            new_caches[f"b{j}"] = c
+        return x_t, new_caches
+
+    if cfg.units > 0:
+        x, new_unit_caches = jax.lax.scan(
+            unit_fn, x, (params["units"], cache["units"])
+        )
+    else:
+        new_unit_caches = cache["units"]
+    new_tail = []
+    for j, kind in enumerate(cfg.tail):
+        x, c = block(kind, params["tail"][j], x, cache["tail"][j])
+        new_tail.append(c)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if "head" in params:
+        logits = L.dense(params["head"], x).astype(jnp.float32)
+    else:
+        logits = L.unembed(params["embed"], x)
+    advance = 1 if active is None else jnp.asarray(active, jnp.int32)
+    new_cache = {
+        "units": new_unit_caches, "tail": new_tail, "pos": pos + advance,
+    }
+    return logits, new_cache

@@ -1,0 +1,252 @@
+"""Continuous-batching front-end: scheduler, paged KV, plan service.
+
+The invariant everything hangs on: batch rows are independent, so any
+admission order / backend must reproduce the per-request greedy decode
+exactly (fp32 smoke model keeps the oracle bit-stable)."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.dist.context import ParallelCtx
+from repro.models.model import init_model
+from repro.serve import engine, pages
+from repro.serve.plan_service import PlanService
+from repro.serve.scheduler import Scheduler, ragged_trace
+
+CTX = ParallelCtx(mesh=None)
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_config("llama3.2-1b", smoke=True), dtype="float32"
+    )
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One continuous run + the per-request serial reference."""
+    cfg = _cfg()
+    params = init_model(jax.random.PRNGKey(0), cfg, CTX)
+    trace = lambda: ragged_trace(  # noqa: E731
+        6, prompt_lens=(6, 10), gen_lens=(3, 8), vocab=cfg.vocab_size
+    )
+    sched = Scheduler(params, cfg, CTX, n_slots=2, max_len=24)
+    res = sched.run(trace())
+    ref = {}
+    for r in trace():
+        logits, cache = engine.prefill(
+            params, {"tokens": jnp.asarray(r.prompt)[None]}, cfg, CTX,
+            max_len=24,
+        )
+        toks = [int(jnp.argmax(logits[0]))]
+        for _ in range(r.max_new_tokens - 1):
+            logits, cache = engine.decode_step(
+                params, cache, jnp.asarray([toks[-1]], jnp.int32), cfg, CTX
+            )
+            toks.append(int(jnp.argmax(logits[0])))
+        ref[r.rid] = toks
+    return cfg, params, trace, res, ref
+
+
+def test_continuous_matches_per_request_reference(served):
+    _, _, _, res, ref = served
+    assert res["outputs"] == ref
+    assert res["generated_tokens"] == sum(len(v) for v in ref.values())
+    assert res["p50_step_ms"] > 0 and res["p99_step_ms"] >= res["p50_step_ms"]
+
+
+def test_static_mode_same_outputs_more_steps(served):
+    cfg, params, trace, res, ref = served
+    static = Scheduler(
+        params, cfg, CTX, n_slots=2, max_len=24, mode="static"
+    ).run(trace())
+    assert static["outputs"] == ref
+    # the ragged trace pairs a short and a long request per static batch,
+    # so static batching must burn strictly more steps
+    assert static["steps"] > res["steps"], (static["steps"], res["steps"])
+
+
+def test_paged_matches_dense(served):
+    cfg, params, trace, res, ref = served
+    paged = Scheduler(
+        params, cfg, CTX, n_slots=2, max_len=24, backend="paged",
+        page_size=4,  # several on-demand page growths per request
+    ).run(trace())
+    assert paged["outputs"] == ref
+    assert paged["backend"] == "paged"
+
+
+def test_admission_budget_defers_but_completes(served):
+    cfg, params, trace, res, ref = served
+    tight = Scheduler(
+        params, cfg, CTX, n_slots=2, max_len=24,
+        admit_budget_s=1e-12,  # < one prefill: one admission per step max
+    )
+    out = tight.run(trace())
+    assert out["outputs"] == ref
+    assert out["budget_deferrals"] > 0
+
+
+def test_staggered_arrivals(served):
+    cfg, params, _, _, ref = served
+    trace = ragged_trace(
+        6, prompt_lens=(6, 10), gen_lens=(3, 8), vocab=cfg.vocab_size,
+        arrival_every=3,
+    )
+    out = Scheduler(params, cfg, CTX, n_slots=2, max_len=24).run(trace)
+    assert out["outputs"] == ref  # arrival time never changes content
+
+
+# ---------------------------------------------------------------------------
+# page allocator (host-side unit tests, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_page_allocator_alloc_release():
+    a = pages.PageAllocator(n_pages=8, page_size=4, n_slots=2, max_pages=3)
+    assert a.capacity == 12
+    assert a.n_free() == 7  # page 0 reserved
+    a.ensure(0, 5)  # 2 pages
+    a.ensure(1, 4)  # 1 page
+    assert a.n_free() == 4
+    t = np.asarray(a.table())
+    assert t.shape == (2, 3)
+    assert (t[0, :2] > 0).all() and t[0, 2] == 0
+    assert 0 not in a.slot_pages[0]  # trash page never allocated
+    a.ensure(0, 5)  # idempotent
+    assert a.n_free() == 4
+    assert a.release(0) == 2
+    assert a.n_free() == 6
+    assert (np.asarray(a.table())[0] == 0).all()
+
+
+def test_page_allocator_exhaustion_and_capacity():
+    a = pages.PageAllocator(n_pages=4, page_size=2, n_slots=2, max_pages=4)
+    a.ensure(0, 6)  # all 3 allocatable pages
+    with pytest.raises(pages.OutOfPages):
+        a.ensure(1, 1)
+    before = list(a.slot_pages[1])
+    assert before == []  # failed ensure allocates nothing
+    with pytest.raises(engine.CacheCapacityError):
+        a.ensure(0, 9)  # 5 pages > max_pages
+
+
+def test_paged_pool_shapes():
+    cfg = _cfg()
+    cache = jax.eval_shape(
+        lambda: pages.paged_init_cache(cfg, n_slots=2, n_pages=9,
+                                       page_size=4, ctx=CTX)
+    )
+    k = cache["units"]["b0"]["k"]
+    assert k.shape == (
+        cfg.units, 9, cfg.num_kv_heads, 4, cfg.resolved_head_dim
+    )
+    assert cache["pos"].shape == (2,)
+
+
+def test_paged_guards():
+    cfg = _cfg()
+    qctx = ParallelCtx(mesh=None, kv_quant=True)
+    with pytest.raises(NotImplementedError):
+        pages.paged_init_cache(cfg, 2, 9, 4, qctx)
+    wcfg = get_config("mixtral-8x7b", smoke=True)
+    assert wcfg.window is not None
+    with pytest.raises(NotImplementedError):
+        pages.paged_init_cache(wcfg, 2, 9, 4, CTX)
+
+
+# ---------------------------------------------------------------------------
+# persistent plan service
+# ---------------------------------------------------------------------------
+
+
+def _auto_ctx():
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return ParallelCtx(mesh=mesh, matmul_strategy="auto")
+
+
+def test_plan_service_roundtrip(tmp_path):
+    """Cold warm-up tunes once per shape; a restored service re-applies
+    the stored winners with zero tuner runs and a stable fingerprint."""
+    cfg = _cfg()
+    ctx = _auto_ctx()
+    cold = PlanService()
+    plans = engine.warm_matmul_plans(
+        cfg, ctx, 2, 8, warm_executables=False, service=cold
+    )
+    assert plans and cold.stats["tunes"] == len(cold.table) > 0
+    assert cold.traffic == {"2x8": 1}
+    path = os.fspath(tmp_path / "plans.json")
+    cold.save(path)
+    data = json.load(open(path))
+    assert data["version"] == 1 and data["entries"]
+
+    warm = PlanService()
+    assert warm.load(path) == len(cold.table)
+    replans = engine.warm_matmul_plans(
+        cfg, ctx, 2, 8, warm_executables=False, service=warm
+    )
+    assert warm.stats["tunes"] == 0
+    assert warm.stats["hits"] == len(plans)
+    assert warm.fingerprint() == cold.fingerprint() != ""
+    # the re-applied plans carry the tuned schedule, not the default
+    for p, q in zip(plans, replans):
+        assert q.cfg.strategy == p.tuned["strategy"]
+        assert q.k_steps == p.tuned["k_blocks"]
+        assert q.resolve_lookahead() == p.tuned["lookahead"]
+
+
+def test_plan_service_keys_isolate_mesh_and_shape():
+    cfg = _cfg()
+    ctx = _auto_ctx()
+    svc = PlanService()
+    engine.warm_matmul_plans(cfg, ctx, 2, 8, warm_executables=False,
+                             service=svc)
+    n = len(svc.table)
+    engine.warm_matmul_plans(cfg, ctx, 4, 8, warm_executables=False,
+                             service=svc)  # new batch -> new decode shape
+    assert len(svc.table) > n
+    assert svc.top_traffic() == [(2, 8), (4, 8)]
+
+
+PLAN_ENV_CODE = r"""
+import os, tempfile
+import jax
+from repro.configs import get_config
+from repro.dist.context import ParallelCtx
+from repro.launch.mesh import make_mesh
+from repro.serve import engine
+from repro.serve.plan_service import PlanService, plan_service, set_plan_service
+
+cfg = get_config("llama3.2-1b", smoke=True)
+mesh = make_mesh((1, 1), ("data", "model"))
+ctx = ParallelCtx(mesh=mesh, matmul_strategy="auto")
+cold = PlanService()
+engine.warm_matmul_plans(cfg, ctx, 2, 8, warm_executables=False, service=cold)
+assert cold.stats["tunes"] > 0
+d = tempfile.mkdtemp()
+path = os.path.join(d, "plans.json")
+cold.save(path)
+# simulate the fresh process: env-seeded singleton, zero re-tunes
+os.environ["REPRO_PLAN_CACHE"] = path
+set_plan_service(None)
+svc = plan_service()
+assert len(svc.table) == len(cold.table)
+engine.warm_matmul_plans(cfg, ctx, 2, 8, warm_executables=False)
+assert svc.stats["tunes"] == 0, svc.stats
+assert svc.stats["hits"] > 0
+print("PLAN_ENV_OK")
+"""
+
+
+def test_plan_service_env_seeding_subprocess(subproc):
+    out = subproc(PLAN_ENV_CODE, devices=1)
+    assert "PLAN_ENV_OK" in out

@@ -3,12 +3,14 @@ pass logits (fp32, no-drop MoE capacity to make the oracle exact)."""
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.dist.context import ParallelCtx
 from repro.models.model import forward, init_model
+from repro.serve import engine
 from repro.serve.engine import decode_step, init_cache, prefill
 
 CTX = ParallelCtx(mesh=None)
@@ -117,3 +119,257 @@ print("SHARDED_DECODE_OK")
 def test_seq_sharded_decode_attention_subprocess(subproc):
     out = subproc(SHARDED_DECODE_CODE, devices=8)
     assert "SHARDED_DECODE_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# cache_shardings: one function, classified by leaf name + path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+@pytest.mark.parametrize(
+    "arch", ["llama3.2-1b", "xlstm-1.3b", "recurrentgemma-9b"]
+)
+def test_cache_shardings_every_kind(arch, kv_quant):
+    """KV leaves (values AND int8 scales): batch over DP + S over TP.
+    Recurrent/conv states and ``pos``: batch over DP only — the size-3
+    conv axis of stacked ``(U, B, 3, d)`` caches must never hit TP (the
+    old shape-sniffing classifier sharded it)."""
+    from repro.launch.mesh import make_mesh
+
+    cfg = get_config(arch, smoke=True)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ctx = ParallelCtx(mesh=mesh)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S_PRE, kv_quant=kv_quant)
+    )
+    sh = engine.cache_shardings(cache, ctx, B)
+    seen = set()
+    for path, spec in jax.tree_util.tree_leaves_with_path(sh):
+        name = engine._leaf_key(path[-1])
+        entries = tuple(spec.spec)
+        ndim = len(entries)
+        if name in engine._KV_LEAF_KEYS:
+            seen.add("kv")
+            assert entries[-2] == "model", (path, entries)  # S over TP
+            assert entries[-4] == "data", (path, entries)  # B over DP
+            assert all(
+                e is None for i, e in enumerate(entries)
+                if i not in (ndim - 2, ndim - 4)
+            ), (path, entries)
+        else:
+            seen.add(name)
+            ax = engine.cache_batch_axis(path)
+            assert "model" not in entries, (path, entries)
+            assert entries[ax] == "data", (path, entries)
+            assert all(
+                e is None for i, e in enumerate(entries) if i != ax
+            ), (path, entries)
+    assert "pos" in seen
+    if arch == "llama3.2-1b":
+        assert "kv" in seen
+    if arch == "recurrentgemma-9b":
+        assert {"kv", "conv", "h"} <= seen  # mixed attn + rglru stack
+    if arch == "xlstm-1.3b":
+        assert "conv" in seen and ("c" in seen or "h" in seen)
+
+
+def test_cache_shardings_engine_is_the_only_impl():
+    """The dryrun duplicate must delegate to the engine's classifier."""
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_mesh
+
+    cfg = get_config("xlstm-1.3b", smoke=True)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ctx = ParallelCtx(mesh=mesh)
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S_PRE))
+    a = dryrun._cache_shardings(cache, ctx, B)
+    b = engine.cache_shardings(cache, ctx, B)
+    assert jax.tree.map(lambda x, y: x == y, a, b)
+    assert all(jax.tree.leaves(jax.tree.map(lambda x, y: x == y, a, b)))
+
+
+# ---------------------------------------------------------------------------
+# capacity: over-capacity writes are dropped, never clamped onto the
+# final slot (regression: the old ``jnp.minimum(pos, s_c - 1)`` clamp
+# silently overwrote the last KV slot forever)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_past_capacity_drops_writes():
+    cfg = _fp32_nodrop(get_config("llama3.2-1b", smoke=True))
+    assert cfg.window is None
+    params = init_model(jax.random.PRNGKey(0), cfg, CTX)
+    max_len = S_PRE + 2
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (B, max_len + 3), 0, cfg.vocab_size
+    )
+    _, cache = prefill(
+        params, {"tokens": toks[:, :S_PRE]}, cfg, CTX, max_len=max_len
+    )
+    for t in range(2):  # fill to exactly max_len
+        _, cache = decode_step(params, cache, toks[:, S_PRE + t], cfg, CTX)
+    full = jax.tree.map(np.asarray, cache)
+    assert int(full["pos"][0]) == max_len
+    # decoding past capacity must leave every KV slot intact
+    _, over = decode_step(params, cache, toks[:, max_len], cfg, CTX)
+    for key in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(over["units"]["b0"][key]), full["units"]["b0"][key]
+        )
+    assert int(np.asarray(over["pos"])[0]) == max_len + 1
+
+
+def test_scheduler_raises_capacity_error():
+    from repro.serve.scheduler import Request, Scheduler
+
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg, CTX)
+    sched = Scheduler(params, cfg, CTX, n_slots=1, max_len=8)
+    req = Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                  max_new_tokens=5)  # 6 + 5 > 8
+    with pytest.raises(engine.CacheCapacityError):
+        sched.submit(req)
+
+
+# ---------------------------------------------------------------------------
+# per-slot position vectors: rows decode at independent depths
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_positions_match_individual_decode():
+    """Merge two batch-1 caches at different prefill depths into one
+    batch-2 cache; one ragged decode_step must equal the two individual
+    steps (the refactor continuous batching is built on)."""
+    cfg = _fp32_nodrop(get_config("llama3.2-1b", smoke=True))
+    params = init_model(jax.random.PRNGKey(0), cfg, CTX)
+    max_len = S_PRE + N_DEC
+    toks = jax.random.randint(
+        jax.random.PRNGKey(2), (2, max_len), 0, cfg.vocab_size
+    )
+    lens = (10, S_PRE)
+    singles = [
+        prefill(
+            params, {"tokens": toks[i: i + 1, : lens[i]]}, cfg, CTX,
+            max_len=max_len,
+        )
+        for i in range(2)
+    ]
+
+    def merge(path, a, b):
+        ax = engine.cache_batch_axis(path)
+        return jnp.concatenate([a, b], axis=ax)
+
+    merged = jax.tree_util.tree_map_with_path(
+        merge, singles[0][1], singles[1][1]
+    )
+    assert np.asarray(merged["pos"]).tolist() == list(lens)
+    step_toks = jnp.asarray(
+        [int(toks[0, lens[0]]), int(toks[1, lens[1]])], jnp.int32
+    )
+    logits, merged = decode_step(params, merged, step_toks, cfg, CTX)
+    for i in range(2):
+        li, _ = decode_step(
+            params, singles[i][1], step_toks[i: i + 1], cfg, CTX
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits[i]), np.asarray(li[0]), atol=2e-4, rtol=1e-3
+        )
+
+
+def test_active_mask_freezes_inactive_rows():
+    cfg = _fp32_nodrop(get_config("llama3.2-1b", smoke=True))
+    params = init_model(jax.random.PRNGKey(0), cfg, CTX)
+    toks = jax.random.randint(
+        jax.random.PRNGKey(4), (B, S_PRE + 2), 0, cfg.vocab_size
+    )
+    _, cache = prefill(
+        params, {"tokens": toks[:, :S_PRE]}, cfg, CTX, max_len=S_PRE + 2
+    )
+    _, cache = decode_step(
+        params, cache, toks[:, S_PRE], cfg, CTX,
+        active=jnp.asarray([1, 0], jnp.int32),
+    )
+    assert np.asarray(cache["pos"]).tolist() == [S_PRE + 1, S_PRE]
+
+
+# ---------------------------------------------------------------------------
+# real-mesh subprocess coverage: quantized seq-sharded decode + the DP
+# divisibility boundary
+# ---------------------------------------------------------------------------
+
+QUANT_SHARDED_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.serve.engine import _decode_attention, _quantize_kv
+from repro.dist.context import ParallelCtx
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
+ctx = ParallelCtx(mesh=mesh, kv_quant=True)
+ctx1 = ParallelCtx(mesh=None, kv_quant=True)
+rng = np.random.default_rng(0)
+B, H, Hkv, S, Dh = 4, 8, 2, 32, 16
+q = jnp.asarray(rng.normal(size=(B, H, Dh)), jnp.float32)
+k = jnp.asarray(rng.normal(size=(B, Hkv, S, Dh)), jnp.float32)
+v = jnp.asarray(rng.normal(size=(B, Hkv, S, Dh)), jnp.float32)
+kq, ks = _quantize_kv(k)
+vq, vs = _quantize_kv(v)
+kn = jnp.asarray(rng.normal(size=(B, Hkv, 1, Dh)), jnp.float32)
+vn = jnp.asarray(rng.normal(size=(B, Hkv, 1, Dh)), jnp.float32)
+# ragged per-row positions: the quant + TP LSE-combine path must accept
+# (B,) slot / n_valid vectors and match the unsharded engine bit-for-bit
+n_valid = jnp.asarray([1, 9, 17, 32], jnp.int32)
+slot = n_valid - 1
+got = _decode_attention(q, kn, vn, kq, vq, slot, n_valid, ctx, ks, vs)
+want = _decode_attention(q, kn, vn, kq, vq, slot, n_valid, ctx1, ks, vs)
+for g, w, name in zip(got, want, ("o", "k", "v", "ks", "vs")):
+    err = np.abs(np.asarray(g, np.float32) - np.asarray(w, np.float32)).max()
+    assert err < (1e-4 if name == "o" else 1e-6), (name, err)
+print("QUANT_SHARDED_OK")
+"""
+
+
+def test_quantized_seq_sharded_decode_subprocess(subproc):
+    out = subproc(QUANT_SHARDED_CODE, devices=4)
+    assert "QUANT_SHARDED_OK" in out
+
+
+DP_BOUNDARY_CODE = r"""
+import warnings
+import numpy as np, jax, jax.numpy as jnp
+from repro.serve import engine
+from repro.serve.engine import _decode_attention
+from repro.dist.context import ParallelCtx
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
+ctx = ParallelCtx(mesh=mesh)
+ctx1 = ParallelCtx(mesh=None)
+rng = np.random.default_rng(1)
+H, Hkv, S, Dh = 8, 2, 32, 16
+for b, should_warn in ((4, False), (3, True)):
+    q = jnp.asarray(rng.normal(size=(b, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, Hkv, S, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, Hkv, S, Dh)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(b, Hkv, 1, Dh)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(b, Hkv, 1, Dh)), jnp.float32)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got, gk, gv = _decode_attention(
+            q, kn, vn, k, v, jnp.int32(7), jnp.int32(8), ctx)
+    warned = any("not divisible by dp" in str(w.message) for w in rec)
+    assert warned == should_warn, (b, warned)
+    want, _, _ = _decode_attention(
+        q, kn, vn, k, v, jnp.int32(7), jnp.int32(8), ctx1)
+    err = np.abs(np.asarray(got) - np.asarray(want)).max()
+    assert err < 1e-4, (b, err)
+    # the sharding classifier makes the same call on the same boundary
+    cache = {"tail": [{"k": k}], "units": {}, "pos": jnp.zeros((b,), jnp.int32)}
+    sh = engine.cache_shardings(cache, ctx, b)
+    bs = sh["tail"][0]["k"].spec[0]
+    assert (bs is None) == should_warn, (b, bs)
+print("DP_BOUNDARY_OK")
+"""
+
+
+def test_dp_divisibility_boundary_subprocess(subproc):
+    out = subproc(DP_BOUNDARY_CODE, devices=4)
+    assert "DP_BOUNDARY_OK" in out
